@@ -1,0 +1,6 @@
+import os
+import sys
+
+_SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+if _SRC not in [os.path.abspath(p) for p in sys.path]:
+    sys.path.insert(0, _SRC)

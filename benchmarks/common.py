@@ -1,0 +1,55 @@
+"""Shared benchmark plumbing: run tuner comparisons under the paper's
+protocols and emit CSV rows.
+
+Protocol notes (faithful to Sec. 5):
+  * cost oracle = AnalyticalTPUCost with measurement noise (sigma=0.1)
+    and n_repeats like the paper's "mean of 10 repeated trials"
+    (n_repeats=3 here to keep CPU benchmark time sane; configurable);
+  * per-trial search clock charges a TVM-like codegen+launch overhead
+    (0.35 s) plus the measured kernel time — Fig. 7b's x-axis;
+  * G-BFS rho=5, N-A2C T=3, s0 = untiled (paper Sec. 5).
+"""
+
+from __future__ import annotations
+
+import math
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import AnalyticalTPUCost, Budget, GemmConfigSpace
+from repro.core.tuners import TUNERS
+
+PAPER_TUNERS = ["g-bfs", "n-a2c", "xgboost-like", "rnn-controller"]
+EXTRA_TUNERS = ["random", "genetic", "sim-anneal"]
+
+TUNER_KW = {
+    "g-bfs": {"rho": 5},
+    "n-a2c": {"steps_per_episode": 3},
+}
+
+
+def make_cost(space: GemmConfigSpace, seed: int = 0, noise: float = 0.1,
+              repeats: int = 3) -> AnalyticalTPUCost:
+    return AnalyticalTPUCost(space, n_repeats=repeats, noise_sigma=noise, seed=seed)
+
+
+def true_cost(space: GemmConfigSpace, state) -> float:
+    """Noise-free cost of a configuration (for fair final scoring)."""
+    return AnalyticalTPUCost(space, n_repeats=1, noise_sigma=0.0).cost(state)
+
+
+def run_tuner(space, tuner_name: str, budget: Budget, seed: int = 0,
+              noise: float = 0.1):
+    cost = make_cost(space, seed=seed, noise=noise)
+    tuner = TUNERS[tuner_name](space, cost, seed=seed, **TUNER_KW.get(tuner_name, {}))
+    res = tuner.tune(budget, overhead_s=0.35)
+    final = (
+        true_cost(space, res.best_state) if res.best_state is not None else math.inf
+    )
+    return res, final
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")

@@ -1,0 +1,56 @@
+"""Paper Fig. 7 — (1024,1024,1024) GEMM tuning.
+
+7a: best discovered cost vs fraction of configuration space explored.
+7b: best discovered cost vs (simulated) search wall time.
+
+Output: CSV rows ``fig7a,<tuner>,<fraction>,<best_us>`` and
+``fig7b,<tuner>,<clock_s>,<best_us>``; the summary compares every tuner
+at the paper's 0.1%-explored operating point.
+"""
+
+from __future__ import annotations
+
+import math
+
+from repro.core import Budget, GemmConfigSpace
+
+from .common import PAPER_TUNERS, EXTRA_TUNERS, run_tuner, true_cost
+
+
+def main(seeds: int = 3, fractions=(0.0002, 0.0005, 0.001), quick: bool = False) -> dict:
+    space = GemmConfigSpace(1024, 1024, 1024)
+    tuners = PAPER_TUNERS + EXTRA_TUNERS
+    if quick:
+        tuners, seeds = PAPER_TUNERS, 1
+    results: dict[str, dict] = {t: {} for t in tuners}
+    for tuner in tuners:
+        for frac in fractions:
+            finals = []
+            for seed in range(seeds):
+                res, final = run_tuner(
+                    space, tuner, Budget(max_fraction=frac), seed=seed
+                )
+                finals.append(final)
+            best = min(finals)
+            mean = sum(finals) / len(finals)
+            results[tuner][frac] = (best, mean)
+            print(f"fig7a,{tuner},{frac},{best*1e6:.3f},{mean*1e6:.3f}", flush=True)
+        # time curve at the largest budget (one seed, the paper's style)
+        res, _ = run_tuner(space, tuner, Budget(max_fraction=fractions[-1]), seed=0)
+        for t_s, c in res.best_time_curve()[:: max(1, res.n_trials // 20)]:
+            print(f"fig7b,{tuner},{t_s:.1f},{true_cost(space, res.best_state)*1e6:.3f},{c*1e6:.3f}")
+    # headline: savings vs xgboost/rnn at 0.1% (paper: 24% / 40%)
+    f = fractions[-1]
+    if "xgboost-like" in results and "g-bfs" in results:
+        g = results["g-bfs"][f][1]
+        x = results["xgboost-like"][f][1]
+        print(f"headline,gbfs_vs_xgboost_saving,{100*(1-g/x):.1f}%")
+    if "rnn-controller" in results and "g-bfs" in results:
+        r = results["rnn-controller"][f][1]
+        g = results["g-bfs"][f][1]
+        print(f"headline,gbfs_vs_rnn_saving,{100*(1-g/r):.1f}%")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Paper Fig. 8 — multi-size comparison + variance.
+
+8a: best cost at 0.1% of the space explored, for (512,512,512),
+    (1024,1024,1024), (2048,2048,2048).
+8b: distribution (min/q1/median/mean/q3/max) of the best cost found
+    within a fixed search-time budget (750 simulated seconds), 10 trials
+    on (1024,1024,1024).
+"""
+
+from __future__ import annotations
+
+import statistics
+
+from repro.core import Budget, GemmConfigSpace
+
+from .common import PAPER_TUNERS, run_tuner
+
+
+def fig8a(tuners=None, seeds: int = 3) -> dict:
+    tuners = tuners or PAPER_TUNERS
+    out = {}
+    for size in (512, 1024, 2048):
+        space = GemmConfigSpace(size, size, size)
+        for tuner in tuners:
+            finals = [
+                run_tuner(space, tuner, Budget(max_fraction=0.001), seed=s)[1]
+                for s in range(seeds)
+            ]
+            mean = sum(finals) / len(finals)
+            out[(size, tuner)] = mean
+            print(f"fig8a,{size},{tuner},{mean*1e6:.3f}", flush=True)
+    return out
+
+
+def fig8b(tuners=None, trials: int = 10, time_budget_s: float = 750.0) -> dict:
+    tuners = tuners or PAPER_TUNERS
+    space = GemmConfigSpace(1024, 1024, 1024)
+    out = {}
+    for tuner in tuners:
+        finals = []
+        for seed in range(trials):
+            _, final = run_tuner(
+                space, tuner, Budget(max_time_s=time_budget_s), seed=seed
+            )
+            finals.append(final * 1e6)
+        finals.sort()
+        q = statistics.quantiles(finals, n=4)
+        row = {
+            "min": finals[0],
+            "q1": q[0],
+            "median": q[1],
+            "mean": statistics.mean(finals),
+            "q3": q[2],
+            "max": finals[-1],
+            "stdev": statistics.stdev(finals),
+        }
+        out[tuner] = row
+        print(
+            f"fig8b,{tuner},min={row['min']:.3f},q1={row['q1']:.3f},"
+            f"median={row['median']:.3f},mean={row['mean']:.3f},"
+            f"q3={row['q3']:.3f},max={row['max']:.3f},std={row['stdev']:.3f}",
+            flush=True,
+        )
+    return out
+
+
+def main(quick: bool = False):
+    a = fig8a(seeds=1 if quick else 3)
+    b = fig8b(trials=3 if quick else 10,
+              time_budget_s=300.0 if quick else 750.0)
+    return a, b
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""§Perf hillclimb driver: re-run a dry-run cell under named variants
+(config / sharding-rule overrides) and tabulate the three roofline terms
+per variant, so each hypothesis → change → measure iteration is one
+command:
+
+  PYTHONPATH=src python -m benchmarks.hillclimb --cell qwen2-72b:train_4k \
+      --variants baseline,ga2,flash2k,remat_dots
+
+Variant records land in experiments/dryrun/single-<variant>/ so nothing
+overwrites the baseline table.
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import dataclasses
+import json
+import sys
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src")))
+
+
+def variant_space(cfg, rules):
+    """Named variants: (cfg_override, rules_override) builders."""
+    import jax
+
+    def no_sp(r):
+        return dataclasses.replace(r, sp=None)
+
+    def no_fsdp(r):
+        return dataclasses.replace(r, fsdp=False)
+
+    return {
+        "baseline": (cfg, rules),
+        # microbatching: 2 gradient-accumulation steps (halves live batch)
+        "ga2": (dataclasses.replace(cfg, dryrun_grad_accum=2), rules),
+        "ga4": (dataclasses.replace(cfg, dryrun_grad_accum=4), rules),
+        # flash-chunked attention already at 4k (threshold below seq)
+        "flash2k": (dataclasses.replace(cfg, attn_chunk_threshold=2048), rules),
+        # remat policy comparison
+        "remat_dots": (dataclasses.replace(cfg, remat="dots"), rules),
+        "remat_none": (dataclasses.replace(cfg, remat="none"), rules),
+        # sharding ablations
+        "no_sp": (cfg, no_sp(rules)),
+        "no_fsdp": (cfg, no_fsdp(rules)),
+        # MoE strategy flips
+        "moe_tp": (dataclasses.replace(cfg, moe_shard="tp"), rules),
+        "moe_ep": (dataclasses.replace(cfg, moe_shard="ep"), rules),
+        "cap1": (dataclasses.replace(cfg, moe_capacity_factor=1.0), rules),
+        # explicit shard_map all-to-all expert dispatch (beyond-GSPMD)
+        "moe_a2a": (dataclasses.replace(cfg, moe_impl="a2a"), rules),
+        "moe_a2a_flash2k": (
+            dataclasses.replace(cfg, moe_impl="a2a", attn_chunk_threshold=2048),
+            rules,
+        ),
+        # combos
+        "ga2_flash2k": (
+            dataclasses.replace(cfg, dryrun_grad_accum=2, attn_chunk_threshold=2048),
+            rules,
+        ),
+        "ga4_flash2k": (
+            dataclasses.replace(cfg, dryrun_grad_accum=4, attn_chunk_threshold=2048),
+            rules,
+        ),
+        "cap1_flash2k": (
+            dataclasses.replace(cfg, moe_capacity_factor=1.0, attn_chunk_threshold=2048),
+            rules,
+        ),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="<arch>:<shape>")
+    ap.add_argument("--variants", default="baseline")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    arch, shape = args.cell.split(":")
+
+    from repro.configs.registry import get_arch
+    from repro.launch.dryrun import run_cell
+    from repro.launch.mesh import make_production_mesh, rules_for_mesh
+
+    base_cfg = get_arch(arch)
+    base_rules = rules_for_mesh(make_production_mesh(multi_pod=args.mesh == "multi"))
+    table = variant_space(base_cfg, base_rules)
+
+    rows = []
+    for name in args.variants.split(","):
+        if name not in table:
+            print(f"unknown variant {name}; have {sorted(table)}")
+            continue
+        cfg_v, rules_v = table[name]
+        rec = run_cell(
+            arch, shape, args.mesh,
+            rules_override=rules_v,
+            cfg_override=cfg_v,
+            tag=name if name != "baseline" else "",
+        )
+        if rec["status"] == "ok":
+            r = rec["roofline"]
+            rows.append(
+                (name, r["compute_s"], r["memory_s"], r["collective_s"],
+                 r["dominant"], r["useful_ratio"], rec["fits_hbm"],
+                 rec["memory_analysis"].get("temp_size_in_bytes", 0) / 1e9)
+            )
+        else:
+            rows.append((name, None, rec.get("error", rec.get("reason", ""))))
+    print(f"\n== hillclimb {args.cell} ({args.mesh}) ==")
+    print(f"{'variant':12s} {'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} "
+          f"{'dominant':>10s} {'useful':>7s} {'fits':>5s} {'tempGB':>7s}")
+    for row in rows:
+        if row[1] is None:
+            print(f"{row[0]:12s} ERROR {row[2][:80]}")
+        else:
+            n, c, m, co, dom, u, fits, temp = row
+            print(f"{n:12s} {c:10.3e} {m:10.3e} {co:10.3e} {dom:>10s} "
+                  f"{u:7.3f} {str(fits):>5s} {temp:7.1f}")
+
+
+if __name__ == "__main__":
+    main()

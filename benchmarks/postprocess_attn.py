@@ -1,0 +1,44 @@
+"""One-shot postprocess: fold the analytic chunked-attention flops into
+already-recorded dry-run JSONs (no recompilation — the stored
+extrapolated flops/bytes/collectives are unchanged inputs)."""
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src")))
+
+from repro.configs.registry import get_arch, get_shape
+from repro.launch.dryrun import analytic_chunked_attn_flops
+from repro.utils.roofline import model_flops, roofline_from_costs
+
+
+def main(root="experiments/dryrun"):
+    n = 0
+    for path in glob.glob(os.path.join(root, "*", "*.json")):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok" or "attn_flops_analytic_per_device" in rec:
+            continue
+        cfg = get_arch(rec["arch"])
+        shape = get_shape(rec["shape"])
+        attn_fix = analytic_chunked_attn_flops(cfg, shape) / rec["chips"]
+        ext = rec["cost_analysis_extrapolated"]
+        terms = roofline_from_costs(
+            ext["flops"] + attn_fix,
+            ext["bytes accessed"],
+            rec["collectives"],
+            rec["chips"],
+            model_flops(cfg, shape),
+        )
+        rec["attn_flops_analytic_per_device"] = attn_fix
+        rec["roofline"] = terms.as_dict()
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        n += 1
+    print(f"updated {n} records")
+
+
+if __name__ == "__main__":
+    main()

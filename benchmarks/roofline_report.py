@@ -1,0 +1,57 @@
+"""Roofline table from the dry-run records (deliverable g).
+
+Reads experiments/dryrun/<mesh>/*.json and prints the per-cell roofline
+terms, dominant bottleneck, MODEL_FLOPS ratio, and HBM fit — the table
+EXPERIMENTS.md §Roofline embeds."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_cells(root: str = "experiments/dryrun", mesh: str = "single") -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(root, mesh, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def table(mesh: str = "single", root: str = "experiments/dryrun") -> str:
+    rows = []
+    header = (
+        f"{'arch':24s} {'shape':12s} {'status':8s} {'compute_s':>10s} "
+        f"{'memory_s':>10s} {'coll_s':>10s} {'dominant':>10s} "
+        f"{'useful':>7s} {'fits':>5s}"
+    )
+    rows.append(header)
+    rows.append("-" * len(header))
+    for rec in load_cells(root, mesh):
+        if rec["status"] == "ok":
+            r = rec["roofline"]
+            rows.append(
+                f"{rec['arch']:24s} {rec['shape']:12s} {'ok':8s} "
+                f"{r['compute_s']:10.3e} {r['memory_s']:10.3e} "
+                f"{r['collective_s']:10.3e} {r['dominant']:>10s} "
+                f"{r['useful_ratio']:7.3f} {str(rec['fits_hbm']):>5s}"
+            )
+        else:
+            reason = rec.get("reason", rec.get("error", ""))[:40]
+            rows.append(
+                f"{rec['arch']:24s} {rec['shape']:12s} {rec['status']:8s} {reason}"
+            )
+    return "\n".join(rows)
+
+
+def main():
+    for mesh in ("single", "multi"):
+        if os.path.isdir(os.path.join("experiments/dryrun", mesh)):
+            print(f"== mesh: {mesh} ==")
+            print(table(mesh))
+            print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+``python -m benchmarks.run [--quick]`` prints ``name,us_per_call,derived``
+CSV per the repo contract, then the full figure protocols:
+
+  fig7   — Fig. 7a/7b: cost-vs-fraction and cost-vs-time @ 1024^3
+  fig8   — Fig. 8a/8b: multi-size @0.1% and variance boxplot
+  kernel — tuned-vs-heuristic GEMM (analytical model + real XLA:CPU)
+  roofline — dry-run roofline table (if dry-run records exist)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="reduced protocol")
+    ap.add_argument(
+        "--only", default=None, choices=["fig7", "fig8", "kernel", "roofline"]
+    )
+    args = ap.parse_args()
+
+    from . import fig7, fig8, kernel_bench, roofline_report
+
+    jobs = {
+        "fig7": lambda: fig7.main(quick=args.quick),
+        "fig8": lambda: fig8.main(quick=args.quick),
+        "kernel": lambda: kernel_bench.main(quick=args.quick),
+        "roofline": roofline_report.main,
+    }
+    if args.only:
+        jobs = {args.only: jobs[args.only]}
+    for name, fn in jobs.items():
+        t0 = time.monotonic()
+        print(f"==== {name} ====", flush=True)
+        try:
+            fn()
+        except Exception as e:  # pragma: no cover
+            print(f"{name},ERROR,{type(e).__name__}: {e}", file=sys.stderr)
+            raise
+        print(f"{name},elapsed_s,{time.monotonic() - t0:.1f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

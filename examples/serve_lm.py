@@ -1,0 +1,43 @@
+"""Serving example: batched prefill + greedy decode through the unified
+Model API (KV cache / recurrent state per family).
+
+  PYTHONPATH=src python examples/serve_lm.py [--arch mamba2-130m]
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import jax
+
+from repro.configs.registry import get_arch
+from repro.launch.serve import ServeEngine
+from repro.models.api import Model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-130m")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).reduced()
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, params, args.requests, args.prompt_len + args.gen)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, (args.requests, args.prompt_len)).astype(np.int32)
+    out = engine.generate(prompts, args.gen)
+    print(f"arch={args.arch} family={cfg.family}")
+    for i in range(min(2, args.requests)):
+        print(f"  request {i}: prompt tail {prompts[i, -4:].tolist()} -> generated {out[i].tolist()}")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

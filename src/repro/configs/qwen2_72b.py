@@ -1,0 +1,20 @@
+"""qwen2-72b — dense GQA decoder with QKV bias.  [arXiv:2407.10671]"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-72b",
+    family="dense",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=29568,
+    vocab_size=152064,
+    mlp_kind="swiglu",
+    norm="rmsnorm",
+    qkv_bias=True,
+    rope_theta=1e6,
+    optimizer="adamw",
+)

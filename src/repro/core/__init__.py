@@ -1,0 +1,48 @@
+"""repro.core — the paper's contribution: GEMM tiling autotuning.
+
+Public surface:
+  GemmConfigSpace / TilingState / Action   — the MDP (paper Sec. 4.1)
+  cost.*                                   — pluggable cost oracles
+  tuners.*                                 — G-BFS, N-A2C + baselines
+  TuningSession / GemmWorkload             — orchestration
+  TuningRecords                            — persisted best configs
+"""
+
+from .config_space import Action, GemmConfigSpace, TilingState
+from .cost import AnalyticalTPUCost, CostBackend, CountingCost, TpuSpec
+from .records import TuningRecords, global_records, set_global_records, workload_key
+from .session import GemmWorkload, TuningSession
+from .tuners import (
+    TUNERS,
+    Budget,
+    GBFSTuner,
+    GBTTuner,
+    NA2CTuner,
+    RNNControllerTuner,
+    TuneResult,
+    Tuner,
+)
+
+__all__ = [
+    "Action",
+    "GemmConfigSpace",
+    "TilingState",
+    "AnalyticalTPUCost",
+    "CostBackend",
+    "CountingCost",
+    "TpuSpec",
+    "TuningRecords",
+    "global_records",
+    "set_global_records",
+    "workload_key",
+    "GemmWorkload",
+    "TuningSession",
+    "TUNERS",
+    "Budget",
+    "GBFSTuner",
+    "GBTTuner",
+    "NA2CTuner",
+    "RNNControllerTuner",
+    "TuneResult",
+    "Tuner",
+]

@@ -1,0 +1,321 @@
+"""GEMM tiling configuration space — the paper's MDP (Sec. 3.3 / 4.1).
+
+A *state* (Eqn. 5) is ``s = [s_m, s_k, s_n, J]`` where ``s_x`` is an
+ordered factor list whose product equals the matrix dimension and ``J``
+is a legitimacy bit.  The *action space* (Eqn. 6) doubles one factor and
+halves another within the same dimension:
+
+    A = { s_x[i] <- 2*s_x[i],  s_x[j] <- s_x[j]/2 }   x in {m,k,n}, i != j
+
+which preserves the product — the paper's central structural insight is
+that the cost surface is smooth under these product-preserving moves.
+
+For power-of-two dims (the paper's benchmarks: 512^3, 1024^3, 2048^3) the
+reachable space is exactly the set of ordered power-of-two compositions;
+its size reproduces the paper's reported counts:
+
+    (512,512,512):    C(12,3) * 10 * C(12,3) = 220*10*220   =   484,000
+    (1024,1024,1024): C(13,3) * 11 * C(13,3) = 286*11*286   =   899,756
+    (2048,2048,2048): C(14,3) * 12 * C(14,3) = 364*12*364   = 1,589,952
+
+TPU interpretation of a state (hardware adaptation, DESIGN.md §2):
+``s_m=[m0,m1,m2,m3]`` → grid dim ``m0``; VMEM block ``bm = m1*m2*m3``;
+MXU sub-tile loop ``m2*m3``; lane/register granularity ``m3`` (same for
+n; ``s_k=[k0,k1]`` → grid ``k0``, VMEM depth ``bk=k1``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+import random as _random
+from typing import Callable, Iterator, Optional, Sequence
+
+import numpy as np
+
+__all__ = [
+    "TilingState",
+    "Action",
+    "GemmConfigSpace",
+    "compositions_pow2",
+    "count_compositions_pow2",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class TilingState:
+    """One configuration ``s = [s_m, s_k, s_n]`` (legitimacy via space)."""
+
+    m: tuple[int, ...]
+    k: tuple[int, ...]
+    n: tuple[int, ...]
+
+    # -- convenience views (TPU mapping) ------------------------------------
+    @property
+    def grid(self) -> tuple[int, int, int]:
+        """(m0, k0, n0): the HBM->VMEM macro-tile grid."""
+        return (self.m[0], self.k[0], self.n[0])
+
+    @property
+    def block_m(self) -> int:
+        return math.prod(self.m[1:]) if len(self.m) > 1 else 1
+
+    @property
+    def block_k(self) -> int:
+        return math.prod(self.k[1:]) if len(self.k) > 1 else 1
+
+    @property
+    def block_n(self) -> int:
+        return math.prod(self.n[1:]) if len(self.n) > 1 else 1
+
+    @property
+    def sub_m(self) -> int:
+        """MXU-facing inner sub-tile (second-level split)."""
+        return math.prod(self.m[2:]) if len(self.m) > 2 else 1
+
+    @property
+    def sub_n(self) -> int:
+        return math.prod(self.n[2:]) if len(self.n) > 2 else 1
+
+    @property
+    def reg_m(self) -> int:
+        return self.m[-1]
+
+    @property
+    def reg_n(self) -> int:
+        return self.n[-1]
+
+    def dims(self) -> tuple[int, int, int]:
+        return (math.prod(self.m), math.prod(self.k), math.prod(self.n))
+
+    def as_lists(self) -> list[list[int]]:
+        return [list(self.m), list(self.k), list(self.n)]
+
+    @staticmethod
+    def from_lists(lists: Sequence[Sequence[int]]) -> "TilingState":
+        m, k, n = lists
+        return TilingState(tuple(m), tuple(k), tuple(n))
+
+    def key(self) -> str:
+        return (
+            ",".join(map(str, self.m))
+            + "|"
+            + ",".join(map(str, self.k))
+            + "|"
+            + ",".join(map(str, self.n))
+        )
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        return f"[{list(self.m)} x {list(self.k)} x {list(self.n)}]"
+
+
+@dataclasses.dataclass(frozen=True)
+class Action:
+    """Double ``s_x[i]``, halve ``s_x[j]`` (paper Eqn. 6)."""
+
+    dim: int  # 0=m, 1=k, 2=n
+    i: int
+    j: int
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        return f"({'mkn'[self.dim]}: x2@{self.i}, /2@{self.j})"
+
+
+def count_compositions_pow2(value: int, parts: int) -> int:
+    """Number of ordered factorizations of ``value`` into ``parts`` factors
+    reachable under the doubling/halving moves (= power-of-two compositions
+    times the fixed placement of the odd part, which rides along factor
+    moves two-at-a-time).  For ``value = odd * 2^e`` this is the number of
+    ways to distribute ``e`` twos into ``parts`` ordered slots, times the
+    number of slots the odd part can occupy — except the odd part is only
+    movable in factors of 2, i.e. it cannot move at all; it stays where the
+    initial state put it.  Hence ``C(e + parts - 1, parts - 1)``.
+    """
+    e = (value & -value).bit_length() - 1  # exponent of 2 in value
+    return math.comb(e + parts - 1, parts - 1)
+
+
+def compositions_pow2(value: int, parts: int) -> Iterator[tuple[int, ...]]:
+    """Enumerate ordered factor tuples ``(f_0..f_{parts-1})`` with
+    ``prod == value`` where all variation is in powers of two and the odd
+    part of ``value`` stays on factor 0 (the reachable set from the
+    paper's initial state ``[value, 1, .., 1]``)."""
+    odd = value
+    e = 0
+    while odd % 2 == 0:
+        odd //= 2
+        e += 1
+    # distribute e twos into `parts` slots
+    for cut in itertools.combinations(range(e + parts - 1), parts - 1):
+        prev = -1
+        exps = []
+        for c in cut:
+            exps.append(c - prev - 1)
+            prev = c
+        exps.append(e + parts - 2 - prev)
+        factors = [2**x for x in exps]
+        factors[0] *= odd
+        yield tuple(factors)
+
+
+class GemmConfigSpace:
+    """The search space for one GEMM workload ``(M, K, N)`` with nesting
+    depths ``(d_m, d_k, d_n)`` (paper defaults 4, 2, 4 for GPUs; same
+    defaults kept for the TPU adaptation — see DESIGN.md §2)."""
+
+    def __init__(
+        self,
+        m: int,
+        k: int,
+        n: int,
+        d_m: int = 4,
+        d_k: int = 2,
+        d_n: int = 4,
+        extra_constraint: Optional[Callable[[TilingState], bool]] = None,
+    ):
+        if min(m, k, n) < 1:
+            raise ValueError(f"bad GEMM dims ({m},{k},{n})")
+        self.m, self.k, self.n = m, k, n
+        self.d_m, self.d_k, self.d_n = d_m, d_k, d_n
+        self.extra_constraint = extra_constraint
+        self._actions = self._build_actions()
+
+    # -- basic protocol ------------------------------------------------------
+    def initial_state(self) -> TilingState:
+        """Paper Sec. 5: ``s0 = [[m,1,..], [k,1], [n,1,..]]`` (no tiling)."""
+        return TilingState(
+            (self.m,) + (1,) * (self.d_m - 1),
+            (self.k,) + (1,) * (self.d_k - 1),
+            (self.n,) + (1,) * (self.d_n - 1),
+        )
+
+    def _build_actions(self) -> list[Action]:
+        acts = []
+        for dim, d in enumerate((self.d_m, self.d_k, self.d_n)):
+            for i in range(d):
+                for j in range(d):
+                    if i != j:
+                        acts.append(Action(dim, i, j))
+        return acts
+
+    @property
+    def actions(self) -> list[Action]:
+        return self._actions
+
+    @property
+    def n_actions(self) -> int:
+        return len(self._actions)
+
+    def step(self, s: TilingState, a: Action) -> Optional[TilingState]:
+        """Apply Eqn. 6/7; returns None when the move is illegitimate
+        (halving an odd factor)."""
+        lists = s.as_lists()
+        row = lists[a.dim]
+        if row[a.j] % 2 != 0:
+            return None
+        row[a.i] *= 2
+        row[a.j] //= 2
+        s2 = TilingState.from_lists(lists)
+        if not self.is_legitimate(s2):
+            return None
+        return s2
+
+    def neighbors(self, s: TilingState) -> list[TilingState]:
+        """g(s) of Eqn. 9 — all legitimate one-action successors."""
+        out = []
+        for a in self._actions:
+            s2 = self.step(s, a)
+            if s2 is not None:
+                out.append(s2)
+        return out
+
+    def is_legitimate(self, s: TilingState) -> bool:
+        """J of Eqn. 5: exact products, positive integers, plus optional
+        hardware constraint (e.g. VMEM budget)."""
+        if any(f < 1 for f in s.m + s.k + s.n):
+            return False
+        if math.prod(s.m) != self.m or math.prod(s.k) != self.k:
+            return False
+        if math.prod(s.n) != self.n:
+            return False
+        if len(s.m) != self.d_m or len(s.k) != self.d_k or len(s.n) != self.d_n:
+            return False
+        if self.extra_constraint is not None and not self.extra_constraint(s):
+            return False
+        return True
+
+    # -- enumeration / sampling ----------------------------------------------
+    def size(self) -> int:
+        return (
+            count_compositions_pow2(self.m, self.d_m)
+            * count_compositions_pow2(self.k, self.d_k)
+            * count_compositions_pow2(self.n, self.d_n)
+        )
+
+    def enumerate(self) -> Iterator[TilingState]:
+        for fm in compositions_pow2(self.m, self.d_m):
+            for fk in compositions_pow2(self.k, self.d_k):
+                for fn in compositions_pow2(self.n, self.d_n):
+                    s = TilingState(fm, fk, fn)
+                    if self.extra_constraint is None or self.extra_constraint(s):
+                        yield s
+
+    def random_state(self, rng: _random.Random) -> TilingState:
+        def rand_comp(value: int, parts: int) -> tuple[int, ...]:
+            odd = value
+            e = 0
+            while odd % 2 == 0:
+                odd //= 2
+                e += 1
+            exps = [0] * parts
+            for _ in range(e):
+                exps[rng.randrange(parts)] += 1
+            factors = [2**x for x in exps]
+            factors[0] *= odd
+            return tuple(factors)
+
+        for _ in range(64):
+            s = TilingState(
+                rand_comp(self.m, self.d_m),
+                rand_comp(self.k, self.d_k),
+                rand_comp(self.n, self.d_n),
+            )
+            if self.is_legitimate(s):
+                return s
+        return self.initial_state()
+
+    # -- featurization (for surrogate / policy models) ------------------------
+    FEATURE_NAMES = None  # set lazily per space
+
+    def features(self, s: TilingState) -> np.ndarray:
+        """Dense feature vector: log2 of every factor plus derived tile
+        descriptors.  Used by the GBT surrogate, the RNN controller
+        baseline, and N-A2C's actor/critic networks."""
+        lg = lambda v: math.log2(max(v, 1))
+        raw = [lg(f) for f in (s.m + s.k + s.n)]
+        bm, bk, bn = s.block_m, s.block_k, s.block_n
+        derived = [
+            lg(bm),
+            lg(bk),
+            lg(bn),
+            lg(s.sub_m),
+            lg(s.sub_n),
+            lg(s.reg_m),
+            lg(s.reg_n),
+            lg(s.grid[0] * s.grid[1] * s.grid[2]),
+            float(bn % 128 == 0),
+            float(bm % 8 == 0),
+            lg(bm * bk + bk * bn + bm * bn),  # ~VMEM working set (elements)
+        ]
+        return np.asarray(raw + derived, dtype=np.float32)
+
+    @property
+    def n_features(self) -> int:
+        return self.d_m + self.d_k + self.d_n + 11
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (
+            f"GemmConfigSpace(({self.m},{self.k},{self.n}), "
+            f"d=({self.d_m},{self.d_k},{self.d_n}), size={self.size()})"
+        )

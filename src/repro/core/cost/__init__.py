@@ -1,0 +1,12 @@
+from .base import CostBackend, CountingCost
+from .analytical import AnalyticalTPUCost, TpuSpec
+from .measured import XLATimedCost, PallasInterpretCost
+
+__all__ = [
+    "CostBackend",
+    "CountingCost",
+    "AnalyticalTPUCost",
+    "TpuSpec",
+    "XLATimedCost",
+    "PallasInterpretCost",
+]

@@ -1,0 +1,78 @@
+"""Cost-backend protocol — the paper's "run the configuration on target
+hardware" abstraction (TVM measure).  Backends return seconds-per-GEMM;
+``math.inf`` marks a configuration that fails to build/run (illegitimate
+on the hardware), matching how TVM reports failed measurements.
+"""
+
+from __future__ import annotations
+
+import abc
+import math
+import time
+from typing import Sequence
+
+from ..config_space import GemmConfigSpace, TilingState
+
+__all__ = ["CostBackend", "CountingCost"]
+
+
+class CostBackend(abc.ABC):
+    """Measures ``cost(s; m, k, n, d_m, d_k, d_n)`` (paper Sec. 3.3)."""
+
+    name: str = "base"
+
+    def __init__(self, space: GemmConfigSpace, n_repeats: int = 1):
+        self.space = space
+        # paper: "arithmetic mean for 10 repeated trials"
+        self.n_repeats = n_repeats
+
+    @abc.abstractmethod
+    def cost_once(self, s: TilingState, repeat_idx: int) -> float:
+        ...
+
+    def cost(self, s: TilingState) -> float:
+        if not self.space.is_legitimate(s):
+            return math.inf
+        total = 0.0
+        for r in range(self.n_repeats):
+            c = self.cost_once(s, r)
+            if not math.isfinite(c):
+                return math.inf
+            total += c
+        return total / self.n_repeats
+
+    def batch_cost(self, states: Sequence[TilingState]) -> list[float]:
+        return [self.cost(s) for s in states]
+
+
+class CountingCost(CostBackend):
+    """Wraps another backend, counting measurements and charging a
+    simulated (or real) wall-clock per trial — used by the benchmark
+    harness to reproduce the paper's cost-vs-time plots without real
+    hardware time."""
+
+    def __init__(self, inner: CostBackend, simulated_overhead_s: float = 0.35):
+        super().__init__(inner.space, n_repeats=1)
+        self.inner = inner
+        self.name = f"counting({inner.name})"
+        self.n_measured = 0
+        self.simulated_clock_s = 0.0
+        self.wall_started = time.monotonic()
+        # TVM-style per-trial overhead: codegen + upload + launch. The
+        # paper's Fig 7b horizontal axis is dominated by this, not by the
+        # GEMM itself.
+        self.simulated_overhead_s = simulated_overhead_s
+
+    def cost_once(self, s: TilingState, repeat_idx: int) -> float:  # pragma: no cover
+        raise RuntimeError("CountingCost delegates via cost()")
+
+    def cost(self, s: TilingState) -> float:
+        c = self.inner.cost(s)
+        self.n_measured += 1
+        self.simulated_clock_s += self.simulated_overhead_s
+        if math.isfinite(c):
+            self.simulated_clock_s += c * self.inner.n_repeats
+        return c
+
+    def fraction_explored(self) -> float:
+        return self.n_measured / max(1, self.space.size())

@@ -1,0 +1,109 @@
+"""Tuning-record store: persisted best configurations per GEMM workload.
+
+This is the compile-time artifact the framework ships — the analogue of
+AutoTVM's tophub tables.  ``kernels/ops.py`` consults the process-global
+store at trace time to pick the Pallas BlockSpec config for each matmul
+shape; ``launch/tune.py`` writes it.  Records are plain JSON for
+diffability and survive crashes via atomic replace.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import tempfile
+import threading
+import time
+from typing import Optional
+
+from .config_space import TilingState
+
+__all__ = ["TuningRecords", "workload_key", "global_records", "set_global_records"]
+
+
+def workload_key(m: int, k: int, n: int, dtype: str = "bfloat16",
+                 backend: str = "analytical_tpu_v5e") -> str:
+    return f"gemm/m{m}k{k}n{n}/{dtype}/{backend}"
+
+
+class TuningRecords:
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self._lock = threading.Lock()
+        self._data: dict[str, dict] = {}
+        if path and os.path.exists(path):
+            with open(path) as f:
+                self._data = json.load(f)
+
+    # -- read ------------------------------------------------------------------
+    def lookup(self, key: str) -> Optional[dict]:
+        return self._data.get(key)
+
+    def lookup_state(self, key: str) -> Optional[TilingState]:
+        rec = self.lookup(key)
+        if rec is None:
+            return None
+        return TilingState.from_lists(rec["state"])
+
+    def best_cost(self, key: str) -> float:
+        rec = self.lookup(key)
+        return rec["cost"] if rec else math.inf
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def keys(self):
+        return self._data.keys()
+
+    # -- write -----------------------------------------------------------------
+    def update(
+        self,
+        key: str,
+        state: TilingState,
+        cost: float,
+        tuner: str,
+        n_trials: int,
+        extra: Optional[dict] = None,
+    ) -> bool:
+        """Keep-best merge; returns True if the record improved."""
+        with self._lock:
+            old = self._data.get(key)
+            if old is not None and old["cost"] <= cost:
+                return False
+            self._data[key] = {
+                "state": state.as_lists(),
+                "cost": cost,
+                "tuner": tuner,
+                "n_trials": n_trials,
+                "timestamp": time.time(),
+                **(extra or {}),
+            }
+            self._flush_locked()
+            return True
+
+    def _flush_locked(self) -> None:
+        if not self.path:
+            return
+        d = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(self._data, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)  # atomic publish
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+
+
+_GLOBAL = TuningRecords()
+
+
+def global_records() -> TuningRecords:
+    return _GLOBAL
+
+
+def set_global_records(records: TuningRecords) -> None:
+    global _GLOBAL
+    _GLOBAL = records

@@ -1,0 +1,107 @@
+"""Tuning sessions: run one-or-many tuners over one-or-many GEMM
+workloads, persist best configs, and emit comparison tables.
+
+``TuningSession`` is what `launch/tune.py` and the benchmark harness
+drive; it is also the integration point for per-architecture tuning
+(``workloads_for_arch`` extracts every distinct GEMM an ArchConfig
+executes and tunes each)."""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Sequence
+
+from .config_space import GemmConfigSpace
+from .cost import AnalyticalTPUCost, CostBackend
+from .records import TuningRecords, workload_key
+from .tuners import TUNERS, Budget, TuneResult
+
+__all__ = ["GemmWorkload", "TuningSession"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmWorkload:
+    m: int
+    k: int
+    n: int
+    dtype: str = "bfloat16"
+    d_m: int = 4
+    d_k: int = 2
+    d_n: int = 4
+    label: str = ""
+
+    def space(self) -> GemmConfigSpace:
+        return GemmConfigSpace(self.m, self.k, self.n, self.d_m, self.d_k, self.d_n)
+
+    def key(self, backend: str) -> str:
+        return workload_key(self.m, self.k, self.n, self.dtype, backend)
+
+
+class TuningSession:
+    def __init__(
+        self,
+        records: Optional[TuningRecords] = None,
+        cost_factory: Optional[Callable[[GemmConfigSpace], CostBackend]] = None,
+        seed: int = 0,
+        verbose: bool = True,
+    ):
+        # NOTE: TuningRecords defines __len__, so an EMPTY store is falsy —
+        # `records or TuningRecords()` would silently drop it
+        self.records = records if records is not None else TuningRecords()
+        self.cost_factory = cost_factory or (
+            lambda space: AnalyticalTPUCost(space, n_repeats=1)
+        )
+        self.seed = seed
+        self.verbose = verbose
+
+    def tune_workload(
+        self,
+        wl: GemmWorkload,
+        tuner_name: str = "g-bfs",
+        budget: Optional[Budget] = None,
+        tuner_kwargs: Optional[dict] = None,
+        seed: Optional[int] = None,
+    ) -> TuneResult:
+        space = wl.space()
+        cost = self.cost_factory(space)
+        budget = budget or Budget(max_fraction=0.001)
+        tuner_cls = TUNERS[tuner_name]
+        tuner = tuner_cls(space, cost, seed=self.seed if seed is None else seed,
+                          **(tuner_kwargs or {}))
+        result = tuner.tune(budget)
+        if result.best_state is not None and math.isfinite(result.best_cost):
+            self.records.update(
+                wl.key(cost.name),
+                result.best_state,
+                result.best_cost,
+                tuner_name,
+                result.n_trials,
+                extra={"label": wl.label},
+            )
+        if self.verbose:
+            print(
+                f"[tune] {wl.label or wl.key(cost.name)} {tuner_name}: "
+                f"best={result.best_cost:.3e}s trials={result.n_trials} "
+                f"frac={result.fraction:.5f} wall={result.wall_s:.1f}s"
+            )
+        return result
+
+    def compare(
+        self,
+        wl: GemmWorkload,
+        tuner_names: Sequence[str],
+        budget: Budget,
+        n_seeds: int = 1,
+        tuner_kwargs: Optional[dict[str, dict]] = None,
+    ) -> dict[str, list[TuneResult]]:
+        """Paper-style head-to-head under an identical budget."""
+        out: dict[str, list[TuneResult]] = {}
+        for name in tuner_names:
+            out[name] = []
+            for s in range(n_seeds):
+                kw = (tuner_kwargs or {}).get(name, {})
+                out[name].append(
+                    self.tune_workload(wl, name, budget, tuner_kwargs=kw, seed=self.seed + s)
+                )
+        return out

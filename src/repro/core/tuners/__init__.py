@@ -1,0 +1,36 @@
+from .base import Budget, Trial, TuneResult, Tuner, TuningContext, BudgetExhausted
+from .gbfs import GBFSTuner
+from .na2c import NA2CTuner
+from .gbt import GBTTuner, GradientBoostedTrees
+from .rnn_controller import RNNControllerTuner
+from .classic import RandomTuner, GridTuner, AnnealingTuner, GeneticTuner
+
+TUNERS = {
+    "g-bfs": GBFSTuner,
+    "n-a2c": NA2CTuner,
+    "xgboost-like": GBTTuner,
+    "rnn-controller": RNNControllerTuner,
+    "random": RandomTuner,
+    "grid": GridTuner,
+    "sim-anneal": AnnealingTuner,
+    "genetic": GeneticTuner,
+}
+
+__all__ = [
+    "Budget",
+    "Trial",
+    "TuneResult",
+    "Tuner",
+    "TuningContext",
+    "BudgetExhausted",
+    "GBFSTuner",
+    "NA2CTuner",
+    "GBTTuner",
+    "GradientBoostedTrees",
+    "RNNControllerTuner",
+    "RandomTuner",
+    "GridTuner",
+    "AnnealingTuner",
+    "GeneticTuner",
+    "TUNERS",
+]

@@ -1,0 +1,168 @@
+"""Tuner protocol + shared bookkeeping (budgets, history, dedup).
+
+Every tuner (the paper's G-BFS and N-A2C, and the baselines it compares
+against) runs through the same :class:`TuningContext` so that
+"fraction of configuration space explored" and "search time" are counted
+identically across methods — which is what the paper's Figs. 7–8 plot.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+import math
+import random
+import time
+from typing import Optional
+
+from ..config_space import GemmConfigSpace, TilingState
+from ..cost.base import CostBackend
+
+__all__ = ["Budget", "Trial", "TuneResult", "TuningContext", "Tuner", "BudgetExhausted"]
+
+
+@dataclasses.dataclass
+class Budget:
+    """Stop conditions; any satisfied one ends the search (paper: T_max)."""
+
+    max_trials: Optional[int] = None
+    max_time_s: Optional[float] = None
+    max_fraction: Optional[float] = None  # of space.size(), e.g. 0.001
+
+    def resolve_trials(self, space_size: int) -> int:
+        n = self.max_trials if self.max_trials is not None else space_size
+        if self.max_fraction is not None:
+            n = min(n, max(1, int(space_size * self.max_fraction)))
+        return n
+
+
+@dataclasses.dataclass
+class Trial:
+    state: TilingState
+    cost: float
+    index: int
+    clock_s: float  # simulated search clock at measurement time
+
+
+@dataclasses.dataclass
+class TuneResult:
+    tuner: str
+    best_state: Optional[TilingState]
+    best_cost: float
+    trials: list[Trial]
+    n_trials: int
+    fraction: float
+    wall_s: float
+    clock_s: float
+
+    def best_curve(self) -> list[tuple[int, float]]:
+        """(n_trials, best_cost_so_far) — the paper's Fig. 7a series."""
+        out, best = [], math.inf
+        for t in self.trials:
+            best = min(best, t.cost)
+            out.append((t.index + 1, best))
+        return out
+
+    def best_time_curve(self) -> list[tuple[float, float]]:
+        """(clock_s, best_cost_so_far) — the paper's Fig. 7b series."""
+        out, best = [], math.inf
+        for t in self.trials:
+            best = min(best, t.cost)
+            out.append((t.clock_s, best))
+        return out
+
+
+class BudgetExhausted(Exception):
+    pass
+
+
+class TuningContext:
+    """Measurement broker: dedups states, charges the budget, tracks the
+    incumbent.  Raising :class:`BudgetExhausted` unwinds the tuner."""
+
+    def __init__(
+        self,
+        space: GemmConfigSpace,
+        cost: CostBackend,
+        budget: Budget,
+        overhead_s: float = 0.35,
+        measure_timeout_s: float = 4.0,
+    ):
+        self.space = space
+        self.cost_backend = cost
+        self.budget = budget
+        self.max_trials = budget.resolve_trials(space.size())
+        self.visited: dict[str, float] = {}
+        self.trials: list[Trial] = []
+        self.best_state: Optional[TilingState] = None
+        self.best_cost = math.inf
+        self.clock_s = 0.0
+        self.overhead_s = overhead_s  # per-measurement codegen/launch charge
+        # AutoTVM-style measurement timeout: a pathological config (the
+        # untiled s0 runs for minutes under the model) charges at most
+        # this much search clock — without it, time-budget comparisons
+        # degenerate for tuners that start at s0
+        self.measure_timeout_s = measure_timeout_s
+        self.wall_start = time.monotonic()
+
+    # -- paper bookkeeping ---------------------------------------------------
+    def seen(self, s: TilingState) -> bool:
+        return s.key() in self.visited
+
+    def done(self) -> bool:
+        if len(self.trials) >= self.max_trials:
+            return True
+        if self.budget.max_time_s is not None and self.clock_s >= self.budget.max_time_s:
+            return True
+        return False
+
+    def measure(self, s: TilingState) -> float:
+        """cost(s) with dedup; each *new* state charges one trial."""
+        key = s.key()
+        if key in self.visited:
+            return self.visited[key]
+        if self.done():
+            raise BudgetExhausted()
+        c = self.cost_backend.cost(s)
+        self.clock_s += self.overhead_s + (
+            0.0 if math.isinf(c) else min(c, self.measure_timeout_s)
+        )
+        self.visited[key] = c
+        self.trials.append(Trial(s, c, len(self.trials), self.clock_s))
+        if c < self.best_cost:
+            self.best_cost, self.best_state = c, s
+        return c
+
+    def result(self, tuner_name: str) -> TuneResult:
+        return TuneResult(
+            tuner=tuner_name,
+            best_state=self.best_state,
+            best_cost=self.best_cost,
+            trials=self.trials,
+            n_trials=len(self.trials),
+            fraction=len(self.trials) / max(1, self.space.size()),
+            wall_s=time.monotonic() - self.wall_start,
+            clock_s=self.clock_s,
+        )
+
+
+class Tuner(abc.ABC):
+    name: str = "tuner"
+
+    def __init__(self, space: GemmConfigSpace, cost: CostBackend, seed: int = 0):
+        self.space = space
+        self.cost = cost
+        self.seed = seed
+        self.rng = random.Random(seed)
+
+    @abc.abstractmethod
+    def run(self, ctx: TuningContext) -> None:
+        """Search until ctx.done() or BudgetExhausted."""
+
+    def tune(self, budget: Budget, overhead_s: float = 0.35) -> TuneResult:
+        ctx = TuningContext(self.space, self.cost, budget, overhead_s=overhead_s)
+        try:
+            self.run(ctx)
+        except BudgetExhausted:
+            pass
+        return ctx.result(self.name)

@@ -1,0 +1,127 @@
+"""Classic baseline tuners: random, grid, simulated annealing, genetic.
+
+Random/grid/GA are the baselines the TVM papers (Chen et al. 2018a/b)
+compare XGBoost against; the paper inherits those comparisons.  Simulated
+annealing is included as an extra neighborhood-aware control (beyond
+paper) since it uses the same MDP moves as G-BFS but no frontier memory.
+"""
+
+from __future__ import annotations
+
+import math
+
+from ..config_space import TilingState
+from .base import Tuner, TuningContext
+
+__all__ = ["RandomTuner", "GridTuner", "AnnealingTuner", "GeneticTuner"]
+
+
+class RandomTuner(Tuner):
+    name = "random"
+
+    def run(self, ctx: TuningContext) -> None:
+        while not ctx.done():
+            s = self.space.random_state(self.rng)
+            if not ctx.seen(s):
+                ctx.measure(s)
+
+
+class GridTuner(Tuner):
+    """Sequential sweep in enumeration order (paper Sec. 2: grid search)."""
+
+    name = "grid"
+
+    def run(self, ctx: TuningContext) -> None:
+        for s in self.space.enumerate():
+            if ctx.done():
+                return
+            ctx.measure(s)
+
+
+class AnnealingTuner(Tuner):
+    name = "sim-anneal"
+
+    def __init__(self, space, cost, seed: int = 0, t0: float = 1.0,
+                 decay: float = 0.995, restarts: int = 8):
+        super().__init__(space, cost, seed)
+        self.t0, self.decay, self.restarts = t0, decay, restarts
+
+    def run(self, ctx: TuningContext) -> None:
+        r = 0
+        while not ctx.done():  # keep restarting until the budget is spent
+            s = self.space.initial_state() if r == 0 else self.space.random_state(self.rng)
+            r += 1
+            c = ctx.measure(s) if not ctx.seen(s) else ctx.visited[s.key()]
+            temp = self.t0
+            while not ctx.done():
+                neigh = self.space.neighbors(s)
+                if not neigh:
+                    break
+                s2 = self.rng.choice(neigh)
+                c2 = ctx.measure(s2) if not ctx.seen(s2) else ctx.visited[s2.key()]
+                if not math.isfinite(c2):
+                    temp *= self.decay
+                    continue
+                # Metropolis on relative cost (scale-free)
+                if c2 < c or self.rng.random() < math.exp(-(c2 - c) / max(c * temp, 1e-30)):
+                    s, c = s2, c2
+                temp *= self.decay
+                if temp < 1e-3:
+                    break
+
+
+class GeneticTuner(Tuner):
+    """GA over exponent vectors; mutation = one MDP move, crossover =
+    per-dimension factor-list swap (keeps products exact)."""
+
+    name = "genetic"
+
+    def __init__(self, space, cost, seed: int = 0, pop: int = 32,
+                 elite: int = 8, mut_p: float = 0.6):
+        super().__init__(space, cost, seed)
+        self.pop_size, self.elite, self.mut_p = pop, elite, mut_p
+
+    def _crossover(self, a: TilingState, b: TilingState) -> TilingState:
+        rows_a, rows_b = a.as_lists(), b.as_lists()
+        child = [rows_a[d] if self.rng.random() < 0.5 else rows_b[d] for d in range(3)]
+        return TilingState.from_lists(child)
+
+    def _mutate(self, s: TilingState) -> TilingState:
+        neigh = self.space.neighbors(s)
+        return self.rng.choice(neigh) if neigh else s
+
+    def run(self, ctx: TuningContext) -> None:
+        pop: list[tuple[float, TilingState]] = []
+        seeds = [self.space.initial_state()] + [
+            self.space.random_state(self.rng) for _ in range(self.pop_size - 1)
+        ]
+        for s in seeds:
+            if not ctx.seen(s):
+                pop.append((ctx.measure(s), s))
+        while not ctx.done():
+            pop.sort(key=lambda t: t[0])
+            elites = pop[: self.elite]
+            children: list[TilingState] = []
+            attempts = 0
+            while len(children) < self.pop_size and attempts < 20 * self.pop_size:
+                attempts += 1
+                pa = self.rng.choice(elites)[1]
+                pb = self.rng.choice(elites)[1]
+                ch = self._crossover(pa, pb)
+                if self.rng.random() < self.mut_p:
+                    ch = self._mutate(ch)
+                if self.space.is_legitimate(ch) and not ctx.seen(ch):
+                    children.append(ch)
+            nxt = list(elites)
+            measured = 0
+            for ch in children:
+                if not ctx.seen(ch):
+                    nxt.append((ctx.measure(ch), ch))
+                    measured += 1
+            if measured == 0:  # converged population: inject fresh genes
+                for _ in range(self.pop_size):
+                    s = self.space.random_state(self.rng)
+                    if not ctx.seen(s):
+                        nxt.append((ctx.measure(s), s))
+                        break
+            pop = nxt

@@ -1,0 +1,45 @@
+"""G-BFS — Greedy Best-First-Search tuner (paper Algorithm 1, Fig. 5).
+
+A priority queue ordered by measured cost holds the frontier.  Each
+iteration pops the cheapest state, samples ``rho`` of its legitimate
+unvisited neighbors (Eqn. 9), measures them, and pushes them back.  With
+``rho = len(g(s))`` and unlimited budget the search visits the entire
+reachable space (paper Sec. 4.2).
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Optional
+
+from ..config_space import TilingState
+from .base import Tuner, TuningContext
+
+__all__ = ["GBFSTuner"]
+
+
+class GBFSTuner(Tuner):
+    name = "g-bfs"
+
+    def __init__(self, space, cost, seed: int = 0, rho: int = 5,
+                 s0: Optional[TilingState] = None):
+        super().__init__(space, cost, seed)
+        self.rho = rho
+        self.s0 = s0
+
+    def run(self, ctx: TuningContext) -> None:
+        s0 = self.s0 or self.space.initial_state()
+        c0 = ctx.measure(s0)
+        tie = itertools.count()  # stable heap order for equal costs
+        pq: list[tuple[float, int, TilingState]] = [(c0, next(tie), s0)]
+        while pq and not ctx.done():
+            cost_s, _, s = heapq.heappop(pq)
+            neigh = [s2 for s2 in self.space.neighbors(s) if not ctx.seen(s2)]
+            if not neigh:
+                continue
+            rho = min(self.rho, len(neigh))
+            batch = self.rng.sample(neigh, rho)
+            for s2 in batch:
+                c2 = ctx.measure(s2)  # raises BudgetExhausted at the limit
+                heapq.heappush(pq, (c2, next(tie), s2))

@@ -1,0 +1,195 @@
+"""XGBoost-style tuner: SMBO with a gradient-boosted-tree surrogate.
+
+This is the paper's primary baseline ("state-of-the-art XGBoost method"
+= AutoTVM's cost-model tuner, Chen et al. 2018b).  The container has no
+xgboost package, so the surrogate — depth-limited regression trees fit on
+residuals with shrinkage — is implemented from scratch in numpy
+(:class:`GradientBoostedTrees`).  The SMBO loop mirrors AutoTVM:
+
+  1. measure a random warmup batch,
+  2. fit the surrogate on log-costs of everything measured,
+  3. propose candidates (random pool + neighbors of incumbents),
+     rank by predicted cost, ε-diversify,
+  4. measure the top batch, go to 2.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from ..config_space import TilingState
+from .base import BudgetExhausted, Tuner, TuningContext
+
+__all__ = ["GBTTuner", "GradientBoostedTrees"]
+
+
+class _Tree:
+    __slots__ = ("feature", "threshold", "left", "right", "value")
+
+    def __init__(self):
+        self.feature = -1
+        self.threshold = 0.0
+        self.left = None
+        self.right = None
+        self.value = 0.0
+
+
+def _fit_tree(X: np.ndarray, y: np.ndarray, depth: int, min_samples: int) -> _Tree:
+    node = _Tree()
+    node.value = float(y.mean())
+    if depth == 0 or len(y) < 2 * min_samples or np.allclose(y, y[0]):
+        return node
+    best_gain, best = 0.0, None
+    n, f = X.shape
+    parent_sse = float(((y - y.mean()) ** 2).sum())
+    idx = np.arange(1, n, dtype=np.float64)
+    for j in range(f):
+        xs = X[:, j]
+        order = np.argsort(xs, kind="stable")
+        xs_s, ys_s = xs[order], y[order]
+        cums = np.cumsum(ys_s)[:-1]
+        cums2 = np.cumsum(ys_s**2)[:-1]
+        # vectorized SSE for every split position i in [1, n)
+        left_n, right_n = idx, n - idx
+        sse = (cums2 - cums * cums / left_n) + (
+            (cums2[-1] + ys_s[-1] ** 2 - cums2)
+            - (cums[-1] + ys_s[-1] - cums) ** 2 / right_n
+        )
+        valid = (xs_s[1:] != xs_s[:-1]) & (left_n >= min_samples) & (right_n >= min_samples)
+        if not valid.any():
+            continue
+        sse = np.where(valid, sse, np.inf)
+        i = int(np.argmin(sse))
+        gain = parent_sse - float(sse[i])
+        if gain > best_gain + 1e-12:
+            best_gain = gain
+            best = (j, 0.5 * (xs_s[i + 1] + xs_s[i]))
+    if best is None:
+        return node
+    j, thr = best
+    mask = X[:, j] <= thr
+    node.feature, node.threshold = j, thr
+    node.left = _fit_tree(X[mask], y[mask], depth - 1, min_samples)
+    node.right = _fit_tree(X[~mask], y[~mask], depth - 1, min_samples)
+    return node
+
+
+def _tree_predict(node: _Tree, X: np.ndarray) -> np.ndarray:
+    if node.feature < 0:
+        return np.full(len(X), node.value)
+    out = np.empty(len(X))
+    mask = X[:, node.feature] <= node.threshold
+    out[mask] = _tree_predict(node.left, X[mask]) if mask.any() else 0
+    out[~mask] = _tree_predict(node.right, X[~mask]) if (~mask).any() else 0
+    return out
+
+
+class GradientBoostedTrees:
+    """Squared-loss GBT with shrinkage — enough of xgboost for SMBO."""
+
+    def __init__(self, n_trees: int = 50, depth: int = 4, lr: float = 0.2,
+                 min_samples: int = 2):
+        self.n_trees, self.depth, self.lr = n_trees, depth, lr
+        self.min_samples = min_samples
+        self.base = 0.0
+        self.trees: list[_Tree] = []
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "GradientBoostedTrees":
+        self.base = float(y.mean())
+        self.trees = []
+        pred = np.full(len(y), self.base)
+        for _ in range(self.n_trees):
+            resid = y - pred
+            t = _fit_tree(X, resid, self.depth, self.min_samples)
+            self.trees.append(t)
+            pred = pred + self.lr * _tree_predict(t, X)
+        return self
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        pred = np.full(len(X), self.base)
+        for t in self.trees:
+            pred = pred + self.lr * _tree_predict(t, X)
+        return pred
+
+
+class GBTTuner(Tuner):
+    name = "xgboost-like"
+
+    def __init__(
+        self,
+        space,
+        cost,
+        seed: int = 0,
+        warmup: int = 16,
+        batch_size: int = 16,
+        pool_size: int = 512,
+        eps_random: float = 0.15,
+        n_trees: int = 50,
+        depth: int = 4,
+        refit_every: int = 1,
+    ):
+        super().__init__(space, cost, seed)
+        self.warmup = warmup
+        self.batch_size = batch_size
+        self.pool_size = pool_size
+        self.eps_random = eps_random
+        self.n_trees, self.depth = n_trees, depth
+        self.refit_every = refit_every
+
+    def _propose_pool(self, ctx: TuningContext) -> list[TilingState]:
+        pool: dict[str, TilingState] = {}
+        for _ in range(self.pool_size):
+            s = self.space.random_state(self.rng)
+            pool.setdefault(s.key(), s)
+        # exploit: neighborhoods of the best measured states
+        ranked = sorted(
+            (t for t in ctx.trials if math.isfinite(t.cost)), key=lambda t: t.cost
+        )[:8]
+        for t in ranked:
+            for s2 in self.space.neighbors(t.state):
+                pool.setdefault(s2.key(), s2)
+        return [s for k, s in pool.items() if k not in ctx.visited]
+
+    def run(self, ctx: TuningContext) -> None:
+        # 1. warmup
+        ctx.measure(self.space.initial_state())
+        while len(ctx.trials) < self.warmup and not ctx.done():
+            s = self.space.random_state(self.rng)
+            if not ctx.seen(s):
+                ctx.measure(s)
+        model = GradientBoostedTrees(self.n_trees, self.depth)
+        it = 0
+        while not ctx.done():
+            # 2. fit surrogate on log-costs
+            xs, ys = [], []
+            for t in ctx.trials:
+                xs.append(self.space.features(t.state))
+                ys.append(
+                    math.log(t.cost) if math.isfinite(t.cost) else math.log(1e3)
+                )
+            if it % self.refit_every == 0:
+                model.fit(np.stack(xs), np.asarray(ys))
+            it += 1
+            # 3. rank pool
+            pool = self._propose_pool(ctx)
+            if not pool:
+                s = self.space.random_state(self.rng)
+                if not ctx.seen(s):
+                    ctx.measure(s)
+                continue
+            feats = np.stack([self.space.features(s) for s in pool])
+            pred = model.predict(feats)
+            order = np.argsort(pred)
+            batch: list[TilingState] = [pool[i] for i in order[: self.batch_size]]
+            # ε-diversification (AutoTVM's ε-greedy proposal mix)
+            n_rand = max(1, int(self.eps_random * len(batch)))
+            for _ in range(n_rand):
+                batch[self.rng.randrange(len(batch))] = pool[
+                    int(order[self.rng.randrange(len(order))])
+                ]
+            # 4. measure
+            for s in batch:
+                if not ctx.seen(s):
+                    ctx.measure(s)

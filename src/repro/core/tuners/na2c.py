@@ -1,0 +1,220 @@
+"""N-A2C — Neighborhood Actor Advantage Critic tuner (paper Algorithm 2,
+Fig. 6).
+
+Per episode the agent rolls out ``T`` steps from the neighborhood center
+(the best state ever visited), collecting *unvisited* states into a
+candidate batch; when the batch is full, all candidates are measured on
+the cost backend, the replay memory is updated with transitions and
+rewards ``r = 1/cost(s')`` (Eqn. 8), and the actor/critic networks are
+trained from replay.  The center re-anchors to the incumbent (line 22 of
+Algorithm 2).
+
+Faithfulness notes:
+  * The paper's ε-greedy is stated as "with probability ε follow π,
+    otherwise random" — we keep that orientation and anneal ε upward
+    (start exploratory, end policy-driven), plus the paper's suggested
+    T-decay heuristic as an option.
+  * Rewards are normalized by the initial state's cost (a fixed positive
+    scale on Eqn. 8 that leaves the ordering and the argmax unchanged)
+    so network training is well-conditioned across GEMM sizes.
+  * Actor/critic are small MLPs over the space's tiling features;
+    illegitimate actions are masked out of the policy.
+"""
+
+from __future__ import annotations
+
+import collections
+import math
+from typing import Optional
+
+import numpy as np
+
+from ..config_space import TilingState
+from .base import BudgetExhausted, Tuner, TuningContext
+
+__all__ = ["NA2CTuner"]
+
+
+class NA2CTuner(Tuner):
+    name = "n-a2c"
+
+    def __init__(
+        self,
+        space,
+        cost,
+        seed: int = 0,
+        steps_per_episode: int = 3,  # paper: T = 3 for the GPU experiments
+        batch_size: int = 16,  # len(B_test)
+        epsilon0: float = 0.35,
+        epsilon1: float = 0.9,
+        gamma: float = 0.9,
+        hidden: int = 64,
+        lr: float = 3e-3,
+        entropy_beta: float = 1e-2,
+        replay_cap: int = 4096,
+        train_iters: int = 8,
+        t_decay: bool = False,
+        s0: Optional[TilingState] = None,
+    ):
+        super().__init__(space, cost, seed)
+        self.T = steps_per_episode
+        self.batch_size = batch_size
+        self.eps0, self.eps1 = epsilon0, epsilon1
+        self.gamma = gamma
+        self.hidden = hidden
+        self.lr = lr
+        self.entropy_beta = entropy_beta
+        self.replay_cap = replay_cap
+        self.train_iters = train_iters
+        self.t_decay = t_decay
+        self.s0 = s0
+        self._jax_ready = False
+
+    # -- lazy jax setup (keeps import cheap for non-RL users) -----------------
+    def _setup(self):
+        import jax
+        import jax.numpy as jnp
+
+        from .nn import adam_init, adam_update, init_mlp, mlp_apply
+
+        self._jax, self._jnp = jax, jnp
+        F, A = self.space.n_features, self.space.n_actions
+        key = jax.random.PRNGKey(self.seed)
+        ka, kc = jax.random.split(key)
+        self.params = {
+            "actor": init_mlp(ka, [F, self.hidden, self.hidden, A]),
+            "critic": init_mlp(kc, [F, self.hidden, self.hidden, 1]),
+        }
+        self.opt_state = adam_init(self.params)
+        self._mlp_apply = mlp_apply
+        self._adam_update = adam_update
+
+        def loss_fn(params, feats, acts, rewards, feats2, mask, mask2):
+            logits = mlp_apply(params["actor"], feats)
+            logits = jnp.where(mask, logits, -1e9)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            v = mlp_apply(params["critic"], feats)[:, 0]
+            v2 = mlp_apply(params["critic"], feats2)[:, 0]
+            target = rewards + self.gamma * jax.lax.stop_gradient(v2)
+            adv = target - v
+            critic_loss = jnp.mean(adv**2)
+            sel_logp = jnp.take_along_axis(logp, acts[:, None], axis=-1)[:, 0]
+            actor_loss = -jnp.mean(sel_logp * jax.lax.stop_gradient(adv))
+            p = jnp.exp(logp)
+            entropy = -jnp.mean(jnp.sum(jnp.where(mask, p * logp, 0.0), axis=-1))
+            return actor_loss + 0.5 * critic_loss - self.entropy_beta * entropy
+
+        @jax.jit
+        def train_step(params, opt_state, feats, acts, rewards, feats2, mask, mask2):
+            g = jax.grad(loss_fn)(params, feats, acts, rewards, feats2, mask, mask2)
+            return adam_update(params, g, opt_state, lr=self.lr)
+
+        @jax.jit
+        def policy_logits(params, feat, mask):
+            logits = mlp_apply(params["actor"], feat[None, :])[0]
+            return jnp.where(mask, logits, -1e9)
+
+        self._train_step = train_step
+        self._policy_logits = policy_logits
+        self._jax_ready = True
+
+    # -- helpers ---------------------------------------------------------------
+    def _action_mask(self, s: TilingState) -> np.ndarray:
+        return np.array(
+            [self.space.step(s, a) is not None for a in self.space.actions],
+            dtype=bool,
+        )
+
+    def _policy_action(self, s: TilingState, mask: np.ndarray) -> int:
+        logits = np.asarray(self._policy_logits(self.params, self.space.features(s), mask))
+        # sample from the masked softmax
+        z = logits - logits.max()
+        p = np.exp(z)
+        p = p / p.sum()
+        return int(np.searchsorted(np.cumsum(p), self.rng.random()))
+
+    # -- Algorithm 2 -------------------------------------------------------------
+    def run(self, ctx: TuningContext) -> None:
+        if not self._jax_ready:
+            self._setup()
+        np_ = np
+        center = self.s0 or self.space.initial_state()
+        c_ref = ctx.measure(center)
+        if not math.isfinite(c_ref):
+            c_ref = 1.0
+        replay: collections.deque = collections.deque(maxlen=self.replay_cap)
+        episode = 0
+        T = self.T
+        while not ctx.done():
+            frac = len(ctx.trials) / max(1, ctx.max_trials)
+            eps = self.eps0 + (self.eps1 - self.eps0) * frac
+            collected: list[TilingState] = []
+            transitions: list[tuple[TilingState, int, TilingState]] = []
+            # -- collect candidates by T-step rollouts around the center ------
+            guard = 0
+            while len(collected) < self.batch_size and guard < 50:
+                guard += 1
+                s = center
+                for _ in range(max(1, T)):
+                    mask = self._action_mask(s)
+                    if not mask.any():
+                        break
+                    if self.rng.random() < eps:
+                        a_idx = self._policy_action(s, mask)
+                        if not mask[a_idx]:
+                            a_idx = self.rng.choice(np_.flatnonzero(mask).tolist())
+                    else:
+                        a_idx = self.rng.choice(np_.flatnonzero(mask).tolist())
+                    s2 = self.space.step(s, self.space.actions[a_idx])
+                    assert s2 is not None
+                    transitions.append((s, a_idx, s2))
+                    if not ctx.seen(s2) and all(
+                        s2.key() != c.key() for c in collected
+                    ):
+                        collected.append(s2)
+                    s = s2
+            if not collected:
+                # neighborhood exhausted: hop the center to a random state
+                center = self.space.random_state(self.rng)
+                if not ctx.seen(center):
+                    ctx.measure(center)
+                continue
+            # -- measure the batch on "hardware" --------------------------------
+            for s2 in collected:
+                ctx.measure(s2)  # may raise BudgetExhausted — fine (line 4)
+            # -- replay update: rewards from the visited-cost table -------------
+            for (s, a_idx, s2) in transitions:
+                c2 = ctx.visited.get(s2.key())
+                if c2 is None:
+                    continue
+                r = 0.0 if not math.isfinite(c2) else float(c_ref / c2)
+                replay.append(
+                    (
+                        self.space.features(s),
+                        a_idx,
+                        r,
+                        self.space.features(s2),
+                        self._action_mask(s),
+                        self._action_mask(s2),
+                    )
+                )
+            # -- re-anchor the neighborhood center (Algorithm 2 line 22) --------
+            if ctx.best_state is not None:
+                center = ctx.best_state
+            # -- train actor + critic from replay -------------------------------
+            if len(replay) >= 8:
+                for _ in range(self.train_iters):
+                    idx = [self.rng.randrange(len(replay)) for _ in range(min(64, len(replay)))]
+                    batch = [replay[i] for i in idx]
+                    feats = np_.stack([b[0] for b in batch])
+                    acts = np_.array([b[1] for b in batch], dtype=np_.int32)
+                    rewards = np_.array([b[2] for b in batch], dtype=np_.float32)
+                    feats2 = np_.stack([b[3] for b in batch])
+                    mask = np_.stack([b[4] for b in batch])
+                    mask2 = np_.stack([b[5] for b in batch])
+                    self.params, self.opt_state = self._train_step(
+                        self.params, self.opt_state, feats, acts, rewards, feats2, mask, mask2
+                    )
+            episode += 1
+            if self.t_decay and episode % 16 == 0 and T > 1:
+                T -= 1

@@ -1,0 +1,94 @@
+"""Tiny pure-JAX neural-net toolkit shared by the learned tuners
+(N-A2C actor/critic MLPs, RNN-controller GRU).  No flax/optax in this
+container, so layers and Adam are implemented directly on pytrees."""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "init_mlp",
+    "mlp_apply",
+    "init_gru",
+    "gru_step",
+    "init_linear",
+    "linear_apply",
+    "adam_init",
+    "adam_update",
+]
+
+
+def init_linear(key, n_in: int, n_out: int) -> dict:
+    wk, _ = jax.random.split(key)
+    scale = math.sqrt(2.0 / n_in)
+    return {
+        "w": jax.random.normal(wk, (n_in, n_out), jnp.float32) * scale,
+        "b": jnp.zeros((n_out,), jnp.float32),
+    }
+
+
+def linear_apply(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ p["w"] + p["b"]
+
+
+def init_mlp(key, sizes: Sequence[int]) -> list[dict]:
+    keys = jax.random.split(key, len(sizes) - 1)
+    return [init_linear(k, a, b) for k, a, b in zip(keys, sizes[:-1], sizes[1:])]
+
+
+def mlp_apply(params: list[dict], x: jnp.ndarray) -> jnp.ndarray:
+    for i, p in enumerate(params):
+        x = linear_apply(p, x)
+        if i < len(params) - 1:
+            x = jnp.tanh(x)
+    return x
+
+
+def init_gru(key, n_in: int, n_hidden: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = math.sqrt(1.0 / n_in)
+    s_h = math.sqrt(1.0 / n_hidden)
+    return {
+        "wi": jax.random.normal(k1, (n_in, 3 * n_hidden), jnp.float32) * s_in,
+        "wh": jax.random.normal(k2, (n_hidden, 3 * n_hidden), jnp.float32) * s_h,
+        "b": jnp.zeros((3 * n_hidden,), jnp.float32),
+        "h0": jax.random.normal(k3, (n_hidden,), jnp.float32) * 0.01,
+    }
+
+
+def gru_step(p: dict, h: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    nh = h.shape[-1]
+    xi = x @ p["wi"]
+    hh = h @ p["wh"]
+    r = jax.nn.sigmoid(xi[..., :nh] + hh[..., :nh] + p["b"][:nh])
+    z = jax.nn.sigmoid(xi[..., nh : 2 * nh] + hh[..., nh : 2 * nh] + p["b"][nh : 2 * nh])
+    cand = jnp.tanh(xi[..., 2 * nh :] + r * hh[..., 2 * nh :] + p["b"][2 * nh :])
+    return (1.0 - z) * h + z * cand
+
+
+# ----------------------------------------------------------------------------
+# Adam on arbitrary pytrees
+# ----------------------------------------------------------------------------
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1 ** t.astype(jnp.float32))
+    vhat_scale = 1.0 / (1 - b2 ** t.astype(jnp.float32))
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}

@@ -1,0 +1,201 @@
+"""RNN-controller tuner — the paper's second baseline ("the general
+configuration optimization method using a RNN controller by Google
+researchers", i.e. the NAS-style controller of Zoph & Le / Bello et al.).
+
+A GRU emits the tiling configuration as a sequence of categorical
+decisions: for each dimension x in {m, k, n} it distributes the
+power-of-two exponent budget e_x over d_x ordered slots, one slot at a
+time, each choice conditioned on the running remainder via masking.
+Sampled configurations are measured; the controller is trained with
+REINFORCE (reward = c_ref / cost, EMA baseline, entropy bonus).
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from ..config_space import TilingState
+from .base import Tuner, TuningContext
+
+__all__ = ["RNNControllerTuner"]
+
+
+def _exponent_budget(value: int) -> int:
+    e = 0
+    while value % 2 == 0:
+        value //= 2
+        e += 1
+    return e
+
+
+class RNNControllerTuner(Tuner):
+    name = "rnn-controller"
+
+    def __init__(
+        self,
+        space,
+        cost,
+        seed: int = 0,
+        hidden: int = 64,
+        lr: float = 4e-3,
+        batch_size: int = 8,
+        entropy_beta: float = 5e-3,
+        baseline_decay: float = 0.9,
+    ):
+        super().__init__(space, cost, seed)
+        self.hidden = hidden
+        self.lr = lr
+        self.batch_size = batch_size
+        self.entropy_beta = entropy_beta
+        self.baseline_decay = baseline_decay
+        self._ready = False
+
+    def _setup(self):
+        import jax
+        import jax.numpy as jnp
+
+        from .nn import adam_init, adam_update, init_gru, init_linear, gru_step, linear_apply
+
+        self._jax, self._jnp = jax, jnp
+        sp = self.space
+        self.budgets = [
+            (_exponent_budget(sp.m), sp.d_m),
+            (_exponent_budget(sp.k), sp.d_k),
+            (_exponent_budget(sp.n), sp.d_n),
+        ]
+        self.max_e = max(b for b, _ in self.budgets)
+        # decision sequence: for each dim, d_x - 1 free slots (last is forced)
+        self.seq_spec: list[tuple[int, int]] = []  # (dim_idx, slot_idx)
+        for di, (_, d) in enumerate(self.budgets):
+            for slot in range(d - 1):
+                self.seq_spec.append((di, slot))
+        key = jax.random.PRNGKey(self.seed)
+        k1, k2, k3 = jax.random.split(key, 3)
+        n_in = self.max_e + 2  # one-hot prev choice + start token
+        self.params = {
+            "gru": init_gru(k1, n_in, self.hidden),
+            "head": init_linear(k2, self.hidden, self.max_e + 1),
+            "emb0": jax.random.normal(k3, (n_in,), jnp.float32) * 0.1,
+        }
+        self.opt_state = adam_init(self.params)
+        self._gru_step = gru_step
+        self._linear_apply = linear_apply
+        self._adam_update = adam_update
+
+        seq_len = len(self.seq_spec)
+        max_e = self.max_e
+
+        def sample_logp(params, choices, masks):
+            """log-prob + entropy of a fixed choice sequence (for grads)."""
+            h = params["gru"]["h0"]
+            x = params["emb0"]
+            logp_total = 0.0
+            ent_total = 0.0
+            for t in range(seq_len):
+                h = gru_step(params["gru"], h, x)
+                logits = linear_apply(params["head"], h)
+                logits = jnp.where(masks[t], logits, -1e9)
+                lp = jax.nn.log_softmax(logits)
+                logp_total = logp_total + lp[choices[t]]
+                p = jnp.exp(lp)
+                ent_total = ent_total - jnp.sum(jnp.where(masks[t], p * lp, 0.0))
+                x = jax.nn.one_hot(choices[t] + 1, max_e + 2)
+            return logp_total, ent_total
+
+        def loss_fn(params, choices_b, masks_b, adv_b):
+            def one(choices, masks, adv):
+                logp, ent = sample_logp(params, choices, masks)
+                return -logp * adv - self.entropy_beta * ent
+
+            return jnp.mean(jax.vmap(one)(choices_b, masks_b, adv_b))
+
+        @jax.jit
+        def train_step(params, opt_state, choices_b, masks_b, adv_b):
+            g = jax.grad(loss_fn)(params, choices_b, masks_b, adv_b)
+            return adam_update(params, g, opt_state, lr=self.lr)
+
+        @jax.jit
+        def logits_step(params, h, x):
+            h2 = gru_step(params["gru"], h, x)
+            return h2, linear_apply(params["head"], h2)
+
+        self._train_step = train_step
+        self._logits_step = logits_step
+        self._ready = True
+
+    # -- sampling ----------------------------------------------------------------
+    def _sample_config(self) -> tuple[TilingState, np.ndarray, np.ndarray]:
+        jnp = self._jnp
+        h = self.params["gru"]["h0"]
+        x = self.params["emb0"]
+        remaining = [b for b, _ in self.budgets]
+        exps: list[list[int]] = [[0] * d for _, d in self.budgets]
+        choices, masks = [], []
+        for (di, slot) in self.seq_spec:
+            h, logits = self._logits_step(self.params, h, x)
+            logits = np.asarray(logits, dtype=np.float64)
+            mask = np.zeros(self.max_e + 1, dtype=bool)
+            mask[: remaining[di] + 1] = True
+            logits[~mask] = -1e9
+            z = logits - logits.max()
+            p = np.exp(z)
+            p /= p.sum()
+            c = int(np.searchsorted(np.cumsum(p), self.rng.random()))
+            c = min(c, remaining[di])
+            choices.append(c)
+            masks.append(mask)
+            exps[di][slot] = c
+            remaining[di] -= c
+            x = jnp.asarray(
+                np.eye(self.max_e + 2, dtype=np.float32)[c + 1]
+            )
+        for di, (_, d) in enumerate(self.budgets):
+            exps[di][d - 1] = remaining[di]
+        dims = (self.space.m, self.space.k, self.space.n)
+        rows = []
+        for di, (value, (_, d)) in enumerate(zip(dims, self.budgets)):
+            odd = value >> _exponent_budget(value)
+            row = [2 ** e for e in exps[di]]
+            row[0] *= odd
+            rows.append(row)
+        s = TilingState.from_lists(rows)
+        return s, np.asarray(choices, np.int32), np.stack(masks)
+
+    # -- REINFORCE loop ------------------------------------------------------------
+    def run(self, ctx: TuningContext) -> None:
+        if not self._ready:
+            self._setup()
+        np_ = np
+        c_ref = ctx.measure(self.space.initial_state())
+        if not math.isfinite(c_ref):
+            c_ref = 1.0
+        baseline = None
+        while not ctx.done():
+            batch = []
+            guard = 0
+            while len(batch) < self.batch_size and guard < 64:
+                guard += 1
+                s, choices, masks = self._sample_config()
+                if not self.space.is_legitimate(s):
+                    continue
+                fresh = not ctx.seen(s)
+                c = ctx.measure(s) if fresh else ctx.visited[s.key()]
+                if fresh:
+                    r = 0.0 if not math.isfinite(c) else float(c_ref / c)
+                    batch.append((choices, masks, r))
+            if not batch:
+                continue
+            rewards = np_.asarray([b[2] for b in batch], np_.float32)
+            if baseline is None:
+                baseline = float(rewards.mean())
+            adv = rewards - baseline
+            baseline = self.baseline_decay * baseline + (1 - self.baseline_decay) * float(
+                rewards.mean()
+            )
+            choices_b = np_.stack([b[0] for b in batch])
+            masks_b = np_.stack([b[1] for b in batch])
+            self.params, self.opt_state = self._train_step(
+                self.params, self.opt_state, choices_b, masks_b, adv
+            )

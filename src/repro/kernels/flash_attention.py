@@ -1,0 +1,130 @@
+"""Pallas TPU flash-attention kernel (causal, GQA-aware).
+
+The second compute hot spot after GEMM: the same online-softmax
+algorithm the model stack uses in pure JAX
+(models/common.chunked_causal_attention — which doubles as this kernel's
+oracle), expressed as a pl.pallas_call with explicit VMEM tiling:
+
+  grid:      (batch, kv_head, q_block)   — q blocks are parallel
+  BlockSpec: Q (1, block_q, G, hd) · K/V (1, block_k, 1, hd) streamed
+             through an inner fori_loop over kv blocks
+  scratch:   f32 accumulator (G, block_q, hd) + running max/sum (G, block_q)
+
+Like the tiled GEMM, (block_q, block_k) are tunable — the same
+GemmConfigSpace machinery applies (2-factor compositions); see
+tests/test_flash_kernel.py for the sweep.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  block_q: int, block_k: int, seq_k: int, causal: bool,
+                  scale: float, out_dtype):
+    """One (batch, kv_head, q_block) cell: stream kv blocks, online
+    softmax into the VMEM accumulator."""
+    iq = pl.program_id(2)
+    g = q_ref.shape[3]
+
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+    m_ref[...] = jnp.full_like(m_ref, -1e30)
+    l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, :, 0].astype(jnp.float32) * scale  # (block_q, g, hd)
+    n_k = seq_k // block_k
+
+    def body(ik, _):
+        sl = pl.dslice(ik * block_k, block_k)
+        kb = k_ref[0, sl, 0].astype(jnp.float32)  # (block_k, hd)
+        vb = v_ref[0, sl, 0].astype(jnp.float32)
+        # logits: (g, block_q, block_k)
+        logits = jnp.einsum("qgd,kd->gqk", q, kb)
+        if causal:
+            q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+            logits = jnp.where((q_pos >= k_pos)[None], logits, -1e30)
+        m_new = jnp.maximum(m_ref[...], logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m_ref[...] - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[..., None] + jnp.einsum("gqk,kd->gqd", p, vb)
+        m_ref[...] = m_new
+        return ()
+
+    # causal: skip kv blocks entirely above the diagonal
+    last = n_k if not causal else jnp.minimum(
+        n_k, ((iq + 1) * block_q + block_k - 1) // block_k
+    )
+    jax.lax.fori_loop(0, last, body, ())
+    out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]
+    o_ref[0, :, 0] = out.transpose(1, 0, 2).astype(out_dtype)  # (block_q, g, hd)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_q", "block_k", "causal", "interpret")
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    block_q: int = 256,
+    block_k: int = 512,
+    causal: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (B, S, H, hd); k/v: (B, S, KV, hd); returns (B, S, H, hd).
+
+    GQA folds the H = KV x G query heads so each grid cell attends one
+    KV head; K/V stream once per (batch, kv_head)."""
+    b, sq, h, hd = q.shape
+    _, sk, kv, _ = k.shape
+    g = h // kv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    if sq % block_q or sk % block_k:
+        raise ValueError(f"blocks ({block_q},{block_k}) must divide ({sq},{sk})")
+    qg = q.reshape(b, sq, kv, g, hd)
+    grid = (b, kv, sq // block_q)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        block_q=block_q,
+        block_k=block_k,
+        seq_k=sk,
+        causal=causal,
+        scale=1.0 / math.sqrt(hd),
+        out_dtype=q.dtype,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, g, hd), lambda ib, ih, iq: (ib, iq, ih, 0, 0)),
+            pl.BlockSpec((1, sk, 1, hd), lambda ib, ih, iq: (ib, 0, ih, 0)),
+            pl.BlockSpec((1, sk, 1, hd), lambda ib, ih, iq: (ib, 0, ih, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, block_q, 1, g, hd), lambda ib, ih, iq: (ib, iq, ih, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, sq, kv, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, block_q, hd), jnp.float32),
+            pltpu.VMEM((g, block_q), jnp.float32),
+            pltpu.VMEM((g, block_q), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(qg, k, v)
+    return out.reshape(b, sq, h, hd)

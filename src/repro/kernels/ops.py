@@ -1,0 +1,131 @@
+"""Public GEMM op: tuning-record-aware dispatch + differentiability.
+
+``gemm(x, w)`` is what the model stack calls for every projection /
+FFN / expert matmul.  Dispatch policy (trace time, all static):
+
+  1. If the process-global kernel policy disables Pallas (default on this
+     CPU-only container, and for full-scale dry-runs where interpret-mode
+     grids would explode the HLO), lower to ``jnp.dot`` — XLA picks its
+     own tiling.  On a real TPU deployment the policy flips on.
+  2. Otherwise look up the tuned config for (M, K, N, dtype) in the
+     global TuningRecords (written by `launch/tune.py`); fall back to the
+     heuristic default when there is no record, or to XLA when shapes
+     don't divide.
+
+The op is differentiable either way: the Pallas path installs a
+custom_vjp whose backward passes are themselves tiled GEMMs (dA = g Bᵀ,
+dB = Aᵀ g) so tuned kernels serve training too.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.records import global_records, workload_key
+from .gemm import KernelConfig, default_config, gemm_pallas, kernel_config_from_state
+
+__all__ = ["gemm", "KernelPolicy", "set_kernel_policy", "kernel_policy"]
+
+
+@dataclasses.dataclass
+class KernelPolicy:
+    use_pallas: bool = False  # flipped on for TPU deployments / kernel tests
+    interpret: bool = True  # CPU container: interpret=True is the only mode
+    cost_backend: str = "analytical_tpu_v5e"  # records namespace to consult
+
+
+_POLICY = KernelPolicy()
+
+
+def kernel_policy() -> KernelPolicy:
+    return _POLICY
+
+
+def set_kernel_policy(policy: KernelPolicy) -> None:
+    global _POLICY
+    _POLICY = policy
+
+
+def _lookup_config(m: int, k: int, n: int, dtype: str) -> Optional[KernelConfig]:
+    rec = global_records().lookup_state(
+        workload_key(m, k, n, dtype, _POLICY.cost_backend)
+    )
+    if rec is None:
+        return None
+    try:
+        return kernel_config_from_state(rec)
+    except ValueError:
+        return None
+
+
+def _pallas_ok(m: int, k: int, n: int, cfg: KernelConfig) -> bool:
+    try:
+        cfg.validate(m, k, n)
+        return True
+    except ValueError:
+        return False
+
+
+def _bwd(cfg, interpret, res, g):
+    a, b = res
+    m, k = a.shape
+    n = b.shape[1]
+    # backward GEMMs get their own tuned configs (shapes differ)
+    cfg_da = _lookup_config(m, n, k, str(g.dtype)) or default_config(m, n, k)
+    cfg_db = _lookup_config(k, m, n, str(g.dtype)) or default_config(k, m, n)
+    da = (
+        gemm_pallas(g, b.T, cfg_da, interpret=interpret)
+        if _pallas_ok(m, n, k, cfg_da)
+        else jnp.dot(g, b.T)
+    ).astype(a.dtype)
+    db = (
+        gemm_pallas(a.T, g, cfg_db, interpret=interpret)
+        if _pallas_ok(k, m, n, cfg_db)
+        else jnp.dot(a.T, g)
+    ).astype(b.dtype)
+    return da, db
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _gemm_pallas_diff(cfg: KernelConfig, interpret: bool, a, b):
+    return gemm_pallas(a, b, cfg, interpret=interpret)
+
+
+def _gemm_fwd(cfg, interpret, a, b):
+    return gemm_pallas(a, b, cfg, interpret=interpret), (a, b)
+
+
+_gemm_pallas_diff.defvjp(_gemm_fwd, _bwd)
+
+
+def gemm(
+    a: jax.Array,
+    b: jax.Array,
+    config: Optional[KernelConfig] = None,
+    use_pallas: Optional[bool] = None,
+) -> jax.Array:
+    """2-D matmul through the kernel policy (see module docstring).
+
+    Higher-rank LHS is flattened to 2-D and restored — every dense layer
+    in `repro.models` funnels through here."""
+    if a.ndim < 2 or b.ndim != 2:
+        raise ValueError(f"gemm expects (.., K) @ (K, N), got {a.shape} @ {b.shape}")
+    lead = a.shape[:-1]
+    k = a.shape[-1]
+    n = b.shape[-1]
+    a2 = a.reshape((-1, k))
+    m = a2.shape[0]
+
+    enabled = _POLICY.use_pallas if use_pallas is None else use_pallas
+    if enabled:
+        cfg = config or _lookup_config(m, k, n, str(a.dtype)) or default_config(m, k, n)
+        if _pallas_ok(m, k, n, cfg):
+            out = _gemm_pallas_diff(cfg, _POLICY.interpret, a2, b)
+            return out.reshape(lead + (n,))
+    out = jnp.dot(a2, b)
+    return out.reshape(lead + (n,))

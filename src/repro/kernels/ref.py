@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the GEMM kernel (and its VJP)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_gemm(a, b, out_dtype=None):
+    out_dtype = out_dtype or a.dtype
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def ref_gemm_vjp(a, b, g):
+    """(dA, dB) for C = A @ B with upstream cotangent g."""
+    da = jnp.dot(g, b.T, preferred_element_type=jnp.float32).astype(a.dtype)
+    db = jnp.dot(a.T, g, preferred_element_type=jnp.float32).astype(b.dtype)
+    return da, db

@@ -1,0 +1,391 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver jits the real step function (train_step for
+train_4k, prefill/serve_step otherwise) against ShapeDtypeStruct
+stand-ins with full production shardings, compiles it, and records:
+
+  * memory_analysis()           -> bytes per device (fits-in-HBM proof)
+  * cost_analysis()             -> FLOPs / bytes   (roofline §compute/§memory)
+  * HLO collective operand bytes -> roofline §collective (utils/hlo.py)
+
+Results land as JSON under experiments/dryrun/<mesh>/<arch>__<shape>.json
+and feed EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import ShapeSpec
+from repro.configs.registry import ARCHS, SHAPES, get_arch, get_shape
+from repro.dist import sharding as shd
+from repro.dist.api import MeshRules, mesh_context
+from repro.launch.mesh import make_production_mesh, rules_for_mesh
+from repro.models.api import Model
+from repro.optim import make_optimizer
+from repro.train.step import make_train_step
+from repro.utils.hlo import collective_stats
+from repro.utils.roofline import V5E, model_flops, roofline_from_costs
+
+__all__ = ["run_cell", "main"]
+
+
+def _mem_analysis_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    out = {}
+    for attr in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        v = getattr(ma, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    return out
+
+
+def _tree_bytes(tree) -> int:
+    return sum(
+        x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree)
+    )
+
+
+def _sharded_tree_bytes(abstract, shardings, mesh) -> int:
+    """Per-device bytes of a sharded pytree (params/opt/cache)."""
+    total = 0
+    flat_a = jax.tree_util.tree_leaves(abstract)
+    flat_s = jax.tree_util.tree_leaves(
+        shardings, is_leaf=lambda s: isinstance(s, jax.sharding.NamedSharding)
+    )
+    for a, s in zip(flat_a, flat_s):
+        import math as _m
+
+        shard_elems = a.size
+        spec = s.spec
+        for dim, name in enumerate(spec):
+            if name is None:
+                continue
+            axes = name if isinstance(name, tuple) else (name,)
+            k = _m.prod(mesh.shape[ax] for ax in axes)
+            shard_elems //= k
+        total += shard_elems * a.dtype.itemsize
+    return total
+
+
+def _depth_variant(cfg, units: float):
+    """A same-family config with ``units`` depth units (see
+    ``_depth_units``): dense/ssm layers, encdec (dec+enc) pairs, hybrid
+    groups-of-interval."""
+    import dataclasses
+
+    n = int(units)
+    if cfg.family == "encdec":
+        return dataclasses.replace(cfg, n_layers=n, n_encoder_layers=n,
+                                   scan_layers=False)
+    if cfg.family == "hybrid" and cfg.hybrid_attn_interval:
+        return dataclasses.replace(
+            cfg, n_layers=n * cfg.hybrid_attn_interval, scan_layers=False
+        )
+    return dataclasses.replace(cfg, n_layers=n, scan_layers=False)
+
+
+def _depth_units(cfg) -> float:
+    if cfg.family == "hybrid" and cfg.hybrid_attn_interval:
+        return cfg.n_layers / cfg.hybrid_attn_interval
+    return float(cfg.n_layers)
+
+
+def _compile_cell(cfg, shape: ShapeSpec, mesh, rules, donate: bool = True):
+    """Lower + compile one step function; returns a measurement dict.
+
+    cost_analysis of a lax.scan body is counted ONCE by XLA regardless of
+    trip count, so run_cell calls this at two shallow depths and
+    extrapolates linearly to the full depth (layers are homogeneous);
+    the full-depth compile is still performed as the pass/fail gate and
+    for memory_analysis."""
+    model = Model(cfg)
+    chips = mesh.devices.size
+    abs_params = model.abstract_params()
+    pspecs = shd.param_specs(cfg, abs_params, mesh, rules)
+    psh = jax.tree_util.tree_map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), pspecs
+    )
+    batch = model.batch_specs(shape)
+    bsh = shd.batch_shardings(batch, mesh, rules)
+    t0 = time.monotonic()
+    with mesh_context(mesh, rules):
+        if shape.kind == "train":
+            optimizer = make_optimizer(cfg.optimizer, 1e-4)
+            abs_opt = jax.eval_shape(optimizer.init, abs_params)
+            osh = shd.opt_state_shardings(
+                cfg.optimizer, abs_opt, pspecs, mesh, rules
+            )
+            step = make_train_step(model, optimizer,
+                                   grad_accum=cfg.dryrun_grad_accum)
+            jitted = jax.jit(
+                step,
+                in_shardings=(psh, osh, bsh),
+                out_shardings=(psh, osh, None),
+                donate_argnums=(0, 1) if donate else (),
+            )
+            lowered = jitted.lower(abs_params, abs_opt, batch)
+            state_bytes = _sharded_tree_bytes(abs_opt, osh, mesh)
+        elif shape.kind == "prefill":
+            def prefill_step(params, b):
+                return model.prefill(params, b, shape.seq_len)
+
+            abs_cache = model.abstract_cache(shape.global_batch, shape.seq_len)
+            csh = shd.cache_shardings(cfg, abs_cache, mesh, rules)
+            jitted = jax.jit(
+                prefill_step,
+                in_shardings=(psh, bsh),
+                out_shardings=(None, csh),
+            )
+            lowered = jitted.lower(abs_params, batch)
+            state_bytes = _sharded_tree_bytes(abs_cache, csh, mesh)
+        else:  # decode
+            abs_cache = model.abstract_cache(shape.global_batch, shape.seq_len)
+            csh = shd.cache_shardings(cfg, abs_cache, mesh, rules)
+
+            def decode(params, cache, tokens):
+                return model.decode_step(params, cache, tokens)
+
+            jitted = jax.jit(
+                decode,
+                in_shardings=(psh, csh, bsh["tokens"]),
+                out_shardings=(None, csh),
+                donate_argnums=(1,) if donate else (),
+            )
+            lowered = jitted.lower(abs_params, abs_cache, batch["tokens"])
+            state_bytes = _sharded_tree_bytes(abs_cache, csh, mesh)
+
+        t_lower = time.monotonic() - t0
+        compiled = lowered.compile()
+        t_compile = time.monotonic() - t0 - t_lower
+
+    costs = compiled.cost_analysis()
+    if isinstance(costs, list):  # older jax returns [dict]
+        costs = costs[0]
+    costs = dict(costs or {})
+    coll = collective_stats(compiled.as_text())
+    return {
+        "flops": float(costs.get("flops", 0.0)),
+        "bytes": float(costs.get("bytes accessed", 0.0)),
+        "collectives": coll,
+        "mem": _mem_analysis_dict(compiled),
+        "param_bytes": _sharded_tree_bytes(abs_params, psh, mesh),
+        "state_bytes": state_bytes,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "chips": chips,
+    }
+
+
+def analytic_chunked_attn_flops(cfg, shape: ShapeSpec) -> float:
+    """GLOBAL attention flops hidden from cost_analysis when the
+    flash-chunked path runs (its q-block map / kv-chunk scan bodies are
+    counted once by XLA).  2·B·S²·H·hd per attention layer-application
+    (qk + pv einsums, causal halving); x3 for training (fwd + bwd)."""
+    if shape.kind == "decode" or cfg.family == "ssm":
+        return 0.0
+    s = shape.seq_len
+    if s <= cfg.attn_chunk_threshold:
+        return 0.0  # full-attention path: flops visible to cost_analysis
+    if cfg.family == "hybrid":
+        n_attn = cfg.n_layers // max(cfg.hybrid_attn_interval, 1)
+    else:
+        n_attn = cfg.n_layers
+    per_layer = 2.0 * shape.global_batch * float(s) * float(s) * cfg.n_heads * cfg.resolved_head_dim
+    total = per_layer * n_attn
+    if shape.kind == "train":
+        total *= 3.0
+    return total
+
+
+def _extrapolate(m1: dict, m2: dict, u1: float, u2: float, u_full: float) -> dict:
+    """Linear-in-depth extrapolation of flops/bytes/collective bytes."""
+    def lin(a, b):
+        slope = (b - a) / (u2 - u1)
+        return a + slope * (u_full - u1)
+
+    coll = {}
+    kinds = set(m1["collectives"]) | set(m2["collectives"])
+    kinds.discard("total_operand_bytes")
+    for k in kinds:
+        a = m1["collectives"].get(k, {"count": 0, "operand_bytes": 0, "result_bytes": 0})
+        b = m2["collectives"].get(k, {"count": 0, "operand_bytes": 0, "result_bytes": 0})
+        coll[k] = {
+            "count": int(round(lin(a["count"], b["count"]))),
+            "operand_bytes": lin(a["operand_bytes"], b["operand_bytes"]),
+            "result_bytes": lin(a["result_bytes"], b["result_bytes"]),
+        }
+    coll["total_operand_bytes"] = sum(v["operand_bytes"] for v in coll.values())
+    return {
+        "flops": lin(m1["flops"], m2["flops"]),
+        "bytes": lin(m1["bytes"], m2["bytes"]),
+        "collectives": coll,
+    }
+
+
+def run_cell(arch_name: str, shape_name: str, mesh_kind: str,
+             out_dir: str = "experiments/dryrun", donate: bool = True,
+             rules_override: MeshRules | None = None,
+             cfg_override=None, tag: str = "") -> dict:
+    cfg = cfg_override or get_arch(arch_name)
+    shape = get_shape(shape_name)
+    model = Model(cfg)
+    rec: dict = {
+        "arch": arch_name,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "kind": shape.kind,
+    }
+    ok, reason = model.supports_shape(shape)
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        _write(rec, out_dir, tag)
+        return rec
+
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    rules = rules_override or rules_for_mesh(mesh)
+    chips = mesh.devices.size
+    try:
+        # 1. full-depth compile: the pass/fail gate + memory analysis
+        full = _compile_cell(cfg, shape, mesh, rules, donate)
+        # 2. two shallow compiles for scan-corrected roofline terms
+        u_full = _depth_units(cfg)
+        u1, u2 = 1.0, 2.0
+        m1 = _compile_cell(_depth_variant(cfg, u1), shape, mesh, rules, donate)
+        m2 = _compile_cell(_depth_variant(cfg, u2), shape, mesh, rules, donate)
+    except Exception as e:  # a failing cell is a bug — record it loudly
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        _write(rec, out_dir, tag)
+        return rec
+
+    ext = _extrapolate(m1, m2, u1, u2, u_full)
+    ga = max(1, cfg.dryrun_grad_accum)
+    if ga > 1 and shape.kind == "train":
+        # the microbatch-accumulation scan body is also counted once by
+        # cost_analysis: scale per-step totals back up (slightly
+        # overcounts the once-per-step optimizer update; noted)
+        ext["flops"] *= ga
+        ext["bytes"] *= ga
+        for v in ext["collectives"].values():
+            if isinstance(v, dict):
+                v["operand_bytes"] *= ga
+                v["result_bytes"] *= ga
+        ext["collectives"]["total_operand_bytes"] = sum(
+            v["operand_bytes"] for v in ext["collectives"].values() if isinstance(v, dict)
+        )
+    mf = model_flops(cfg, shape)
+    attn_fix = analytic_chunked_attn_flops(cfg, shape) / chips
+    terms = roofline_from_costs(
+        ext["flops"] + attn_fix, ext["bytes"], ext["collectives"], chips, mf
+    )
+    raw_terms = roofline_from_costs(
+        full["flops"], full["bytes"], full["collectives"], chips, mf
+    )
+    hbm = V5E().hbm_bytes
+    per_device_total = (
+        full["param_bytes"] + full["state_bytes"] + full["mem"].get("temp_size_in_bytes", 0)
+    )
+    rec.update(
+        {
+            "status": "ok",
+            "chips": chips,
+            "lower_s": full["lower_s"],
+            "compile_s": full["compile_s"],
+            "cost_analysis_raw": {"flops": full["flops"], "bytes accessed": full["bytes"]},
+            "cost_analysis_extrapolated": {"flops": ext["flops"], "bytes accessed": ext["bytes"]},
+            "attn_flops_analytic_per_device": attn_fix,
+            "depth_units": {"full": u_full, "probe": [u1, u2]},
+            "memory_analysis": full["mem"],
+            "param_bytes_per_device": full["param_bytes"],
+            "state_bytes_per_device": full["state_bytes"],
+            "bytes_per_device_total": per_device_total,
+            "fits_hbm": bool(per_device_total < hbm),
+            "collectives": ext["collectives"],
+            "collectives_raw": full["collectives"],
+            "roofline": terms.as_dict(),
+            "roofline_raw_scanbody": raw_terms.as_dict(),
+        }
+    )
+    _write(rec, out_dir, tag)
+    return rec
+
+
+def _write(rec: dict, out_dir: str, tag: str = "") -> None:
+    d = os.path.join(out_dir, rec["mesh"] + (f"-{tag}" if tag else ""))
+    os.makedirs(d, exist_ok=True)
+    path = os.path.join(d, f"{rec['arch']}__{rec['shape']}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    status = rec["status"]
+    extra = ""
+    if status == "ok":
+        r = rec["roofline"]
+        extra = (
+            f" compile={rec['compile_s']:.0f}s dominant={r['dominant']}"
+            f" c/m/coll={r['compute_s']:.2e}/{r['memory_s']:.2e}/{r['collective_s']:.2e}s"
+            f" fits_hbm={rec['fits_hbm']}"
+        )
+    elif status == "error":
+        extra = " " + rec["error"][:200]
+    elif status == "skipped":
+        extra = " " + rec["reason"]
+    print(f"[dryrun] {rec['mesh']:6s} {rec['arch']:24s} {rec['shape']:12s} {status}{extra}", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = [(a, s) for a in ARCHS for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    for mesh_kind in meshes:
+        for arch, shp in cells:
+            out_path = os.path.join(
+                args.out, mesh_kind, f"{arch}__{shp}.json"
+            )
+            if args.skip_existing and os.path.exists(out_path):
+                with open(out_path) as f:
+                    if json.load(f).get("status") in ("ok", "skipped"):
+                        print(f"[dryrun] skip existing {mesh_kind} {arch} {shp}")
+                        continue
+            run_cell(arch, shp, mesh_kind, out_dir=args.out)
+
+
+if __name__ == "__main__":
+    main()

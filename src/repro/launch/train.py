@@ -1,0 +1,87 @@
+"""Training launcher.
+
+CPU-scale example (runs in this container):
+  python -m repro.launch.train --arch yi-6b --reduced --steps 100 \
+      --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+
+Production posture (on a real TPU slice this is the same command the
+per-host runner would execute; device count comes from the runtime):
+  python -m repro.launch.train --arch qwen2-72b --mesh single --steps 1000
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs.registry import get_arch
+from repro.data.pipeline import DataPipeline, SyntheticLM
+from repro.dist.fault import StragglerWatchdog, run_with_restarts
+from repro.train.trainer import Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="tiny same-family config (CPU smoke scale)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log", default=None)
+    ap.add_argument("--mesh", default=None, choices=[None, "local", "single", "multi"])
+    ap.add_argument("--data-axis", type=int, default=1)
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--max-restarts", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+
+    mesh = rules = None
+    if args.mesh == "local":
+        from repro.launch.mesh import make_local_mesh, rules_for_mesh
+
+        mesh = make_local_mesh(args.data_axis, args.model_axis)
+        rules = rules_for_mesh(mesh)
+    elif args.mesh in ("single", "multi"):
+        from repro.launch.mesh import make_production_mesh, rules_for_mesh
+
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+        rules = rules_for_mesh(mesh)
+
+    ds = SyntheticLM(cfg.vocab_size, args.seq, seed=args.seed)
+    pipe = DataPipeline(
+        ds, args.batch,
+        process_index=jax.process_index(), process_count=jax.process_count(),
+    )
+
+    def attempt(i: int):
+        trainer = Trainer(
+            cfg, pipe, args.ckpt_dir,
+            mesh=mesh, rules=rules,
+            lr=args.lr, total_steps=args.steps, grad_accum=args.grad_accum,
+            ckpt_every=args.ckpt_every, log_path=args.log,
+            watchdog=StragglerWatchdog(), seed=args.seed,
+        )
+        log = trainer.train(args.steps, resume=True)
+        return trainer, log
+
+    trainer, log = run_with_restarts(attempt, max_restarts=args.max_restarts)
+    if log:
+        print(
+            f"[train] {args.arch} done: step={log[-1]['step']} "
+            f"loss={log[-1]['loss']:.4f} "
+            f"first_loss={log[0]['loss']:.4f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

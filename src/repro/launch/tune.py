@@ -1,0 +1,83 @@
+"""Offline GEMM autotuning for an architecture — the paper's technique
+as a first-class framework feature.
+
+Extracts every distinct GEMM workload the arch executes at the given
+shape (qkv / attn-out / ffn / experts / lm-head, see
+ArchConfig.gemm_workloads), tunes each with the selected method, and
+writes the best configs to a TuningRecords JSON that
+``kernels/ops.py::gemm`` consults at trace time.
+
+  python -m repro.launch.tune --arch yi-6b --shape train_4k \
+      --tuner g-bfs --fraction 0.001 --records records/yi-6b.json
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.configs.registry import get_arch, get_shape
+from repro.core import Budget, GemmWorkload, TuningRecords, TuningSession
+from repro.core.cost import AnalyticalTPUCost
+
+
+def _pad_dim(x: int) -> int:
+    """Round a GEMM dim up so its odd part is small.  The paper's action
+    space only moves powers of two between loop factors, so a large odd
+    part (e.g. 29568 = 2^7·231) pins a >=231-way grid split on that dim;
+    the kernel pads instead — exactly what Pallas BlockSpec padding does
+    on TPU.  Multiples of 2048 keep the odd part <= 15 for every
+    assigned arch while wasting < 7% FLOPs."""
+    if x >= 2048:
+        return ((x + 2047) // 2048) * 2048
+    if x >= 128:
+        return ((x + 127) // 128) * 128
+    return x
+
+
+def workloads_for_arch(arch_name: str, shape_name: str,
+                       max_tokens: int = 8192) -> list[GemmWorkload]:
+    """Per-arch GEMM list.  Token count is clamped: tiling choices
+    saturate well below the full 1M-token batch and the search space for
+    the M dimension explodes otherwise (the records are keyed by shape,
+    so serving different M re-tunes or falls back to the heuristic)."""
+    cfg = get_arch(arch_name)
+    shape = get_shape(shape_name)
+    tokens = min(shape.global_batch * shape.seq_len, max_tokens)
+    out = []
+    for (m, k, n, tag) in cfg.gemm_workloads(1, tokens):
+        m = _pad_dim(min(m, max_tokens))
+        out.append(
+            GemmWorkload(m, _pad_dim(k), _pad_dim(n), dtype=cfg.compute_dtype,
+                         label=f"{arch_name}/{tag}")
+        )
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--tuner", default="g-bfs")
+    ap.add_argument("--fraction", type=float, default=0.001)
+    ap.add_argument("--max-trials", type=int, default=None)
+    ap.add_argument("--records", default="records/tuning.json")
+    ap.add_argument("--noise", type=float, default=0.05)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    records = TuningRecords(args.records)
+    session = TuningSession(
+        records,
+        cost_factory=lambda space: AnalyticalTPUCost(
+            space, n_repeats=3, noise_sigma=args.noise, seed=args.seed
+        ),
+        seed=args.seed,
+    )
+    budget = Budget(max_fraction=args.fraction, max_trials=args.max_trials)
+    for wl in workloads_for_arch(args.arch, args.shape):
+        session.tune_workload(wl, args.tuner, budget)
+    print(f"[tune] wrote {len(records)} records to {args.records}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,206 @@
+"""Zamba2-style hybrid: Mamba2 backbone with ONE shared attention+MLP
+block applied every ``hybrid_attn_interval`` mamba layers
+(arXiv:2411.15242, simplified: the shared block reuses the same params at
+every application, which is the architecture's parameter-sharing trick).
+
+Layout for L mamba layers and interval I:
+  [mamba x I, shared_attn] x (L // I)  then  [mamba x (L % I)]
+Mamba groups are scanned (params stacked per group position), the shared
+block is closed over — so HLO stays compact and the shared params appear
+once.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common as cm
+from repro.models import mamba2 as mb
+from repro.models import transformer as tf
+
+__all__ = [
+    "init_hybrid_params",
+    "hybrid_forward",
+    "hybrid_hidden",
+    "hybrid_prefill",
+    "hybrid_init_cache",
+    "hybrid_decode_step",
+]
+
+
+def _split(cfg: ArchConfig):
+    i = cfg.hybrid_attn_interval
+    n_groups = cfg.n_layers // i if i else 0
+    tail = cfg.n_layers - n_groups * i if i else cfg.n_layers
+    return i, n_groups, tail
+
+
+def init_hybrid_params(cfg: ArchConfig, key) -> dict:
+    dt = jnp.dtype(cfg.param_dtype)
+    i, n_groups, tail = _split(cfg)
+    ks = jax.random.split(key, 6)
+    v, d = cfg.padded_vocab, cfg.d_model
+    p: dict = {
+        "embed": {"table": cm.trunc_normal(ks[0], (v, d), d ** -0.5, dt)},
+        "ln_f": cm.init_norm(d, cfg.norm, dt),
+        "head": {"w": cm.trunc_normal(ks[1], (d, v), 1.0 / (d**0.5), dt)},
+        "shared_attn": tf.init_block(ks[2], cfg, moe=False),
+    }
+    if n_groups:
+        gk = jax.random.split(ks[3], n_groups * i).reshape(n_groups, i, 2)
+        p["groups"] = jax.vmap(
+            lambda kk: jax.vmap(lambda k2: mb.init_mamba_block(k2, cfg))(kk)
+        )(gk)
+    if tail:
+        tk = jax.random.split(ks[4], tail)
+        p["tail"] = jax.vmap(lambda k2: mb.init_mamba_block(k2, cfg))(tk)
+    return p
+
+
+def _run_group_stack(cfg, stacked, x, inner_scan_len):
+    def body(xc, layer_p):
+        return mb.mamba_block_apply(cfg, layer_p, xc), None
+
+    x, _ = cm.scan_or_unroll(cfg.scan_layers, body, x, stacked)
+    return x
+
+
+def hybrid_hidden(cfg: ArchConfig, params: dict, batch: dict):
+    """Returns (final hidden, aux=0)."""
+    i, n_groups, tail = _split(cfg)
+    tokens = batch["tokens"]
+    x = tf.embed_tokens(cfg, params, tokens)
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    if n_groups:
+        def group_body(xc, group_params):
+            xc = _run_group_stack(cfg, group_params, xc, i)
+            xc, _, _ = tf.block_apply(
+                cfg, params["shared_attn"], xc, positions, moe=False
+            )
+            return xc, None
+
+        if cfg.remat != "none":
+            group_body = jax.checkpoint(
+                group_body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                if cfg.remat == "dots"
+                else None,
+            )
+        x, _ = cm.scan_or_unroll(cfg.scan_layers, group_body, x, params["groups"])
+    if tail:
+        x = _run_group_stack(cfg, params["tail"], x, tail)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def hybrid_forward(cfg: ArchConfig, params: dict, batch: dict):
+    """Returns (logits, aux=0)."""
+    x, aux = hybrid_hidden(cfg, params, batch)
+    return tf.lm_logits(cfg, params, x), aux
+
+
+def hybrid_prefill(cfg: ArchConfig, params: dict, batch: dict, max_len: int):
+    """Real prefill: run the prompt, collecting the mamba recurrent state
+    per layer and the shared-attention KV per application."""
+    i, n_groups, tail = _split(cfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = tf.embed_tokens(cfg, params, tokens)
+    positions = jnp.arange(s)[None, :]
+    kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.compute_dtype)
+
+    def pad_kv(kv):  # (B, S, KV, hd) -> (B, max_len, KV, hd)
+        buf = jnp.zeros((b, max_len, kvh, hd), dt)
+        return jax.lax.dynamic_update_slice_in_dim(buf, kv.astype(dt), 0, axis=1)
+
+    new_cache: dict = {"len": jnp.asarray(s, jnp.int32)}
+    if n_groups:
+        def group_body(xc, group_params):
+            def inner(xc2, layer_p):
+                xc2, st = mb.mamba_block_prefill(cfg, layer_p, xc2)
+                return xc2, st
+
+            xc, states = cm.scan_or_unroll(cfg.scan_layers, inner, xc, group_params)
+            xc, kv, _ = tf.block_apply(
+                cfg, params["shared_attn"], xc, positions, moe=False
+            )
+            return xc, (states, pad_kv(kv["k"]), pad_kv(kv["v"]))
+
+        x, (m_states, ks, vs) = cm.scan_or_unroll(
+            cfg.scan_layers, group_body, x, params["groups"]
+        )
+        new_cache["mamba"] = m_states
+        new_cache["attn_k"], new_cache["attn_v"] = ks, vs
+    if tail:
+        def tail_inner(xc2, layer_p):
+            xc2, st = mb.mamba_block_prefill(cfg, layer_p, xc2)
+            return xc2, st
+
+        x, tail_states = cm.scan_or_unroll(cfg.scan_layers, tail_inner, x, params["tail"])
+        new_cache["tail"] = tail_states
+    logits = tf.lm_logits(cfg, params, x[:, -1:, :])
+    return logits, new_cache
+
+
+def hybrid_init_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    i, n_groups, tail = _split(cfg)
+    kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    state = jax.vmap(lambda _: mb.init_mamba_state(cfg, batch))(jnp.arange(max(n_groups * i, 1)))
+    cache = {
+        "mamba": jax.tree_util.tree_map(
+            lambda a: a.reshape(n_groups, i, *a.shape[1:]) if n_groups else a, state
+        )
+        if n_groups
+        else None,
+        "attn_k": jnp.zeros((max(n_groups, 1), batch, max_len, kvh, hd), jnp.dtype(cfg.compute_dtype)),
+        "attn_v": jnp.zeros((max(n_groups, 1), batch, max_len, kvh, hd), jnp.dtype(cfg.compute_dtype)),
+        "len": jnp.zeros((), jnp.int32),
+    }
+    if tail:
+        cache["tail"] = jax.vmap(lambda _: mb.init_mamba_state(cfg, batch))(jnp.arange(tail))
+    return cache
+
+
+def hybrid_decode_step(cfg: ArchConfig, params: dict, cache: dict, tokens: jax.Array):
+    i, n_groups, tail = _split(cfg)
+    b = tokens.shape[0]
+    x = tf.embed_tokens(cfg, params, tokens)
+    pos = cache["len"]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    new_cache = dict(cache)
+
+    if n_groups:
+        def group_body(xc, scanned):
+            group_params, m_state, k_c, v_c = scanned
+
+            def inner(xc2, inp):
+                layer_p, st = inp
+                xc2, new_st = mb.mamba_block_decode(cfg, layer_p, st, xc2)
+                return xc2, new_st
+
+            xc, new_m = cm.scan_or_unroll(cfg.scan_layers, inner, xc, (group_params, m_state))
+            xc, new_kv, _ = tf.block_apply(
+                cfg, params["shared_attn"], xc, positions, moe=False,
+                kv_cache={"k": k_c, "v": v_c}, cache_len=pos,
+            )
+            return xc, (new_m, new_kv["k"], new_kv["v"])
+
+        x, (new_m, new_k, new_v) = cm.scan_or_unroll(
+            cfg.scan_layers, group_body, x,
+            (params["groups"], cache["mamba"], cache["attn_k"], cache["attn_v"]),
+        )
+        new_cache["mamba"], new_cache["attn_k"], new_cache["attn_v"] = new_m, new_k, new_v
+    if tail:
+        def inner(xc2, inp):
+            layer_p, st = inp
+            xc2, new_st = mb.mamba_block_decode(cfg, layer_p, st, xc2)
+            return xc2, new_st
+
+        x, new_tail = cm.scan_or_unroll(cfg.scan_layers, inner, x, (params["tail"], cache["tail"]))
+        new_cache["tail"] = new_tail
+    logits = tf.lm_logits(cfg, params, x)
+    new_cache["len"] = cache["len"] + 1
+    return logits, new_cache

@@ -1,0 +1,357 @@
+"""Mamba2 — State Space Duality (SSD) blocks (arXiv:2405.21060).
+
+Training/prefill uses the chunked SSD algorithm: quadratic
+attention-like computation inside chunks (MXU-friendly matmuls) plus a
+linear recurrence across chunk boundaries (lax.scan / associative_scan).
+Decode keeps an O(1)-in-sequence recurrent state per layer — this is why
+the long_500k cell runs for the SSM-family archs while full-attention
+archs skip it (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.api import constrain, logical
+from repro.kernels.ops import gemm
+from repro.models import common as cm
+
+__all__ = [
+    "init_mamba_block",
+    "mamba_block_apply",
+    "mamba_block_prefill",
+    "mamba_block_decode",
+    "init_mamba_state",
+    "ssd_chunked",
+    "ssd_reference",
+    "init_mamba_lm",
+    "mamba_lm_forward",
+    "mamba_lm_prefill",
+    "mamba_lm_init_cache",
+    "mamba_lm_decode_step",
+]
+
+
+# =============================================================================
+# SSD core
+# =============================================================================
+
+
+def ssd_reference(x, dt, A, B, C):
+    """Naive O(L) recurrence — the oracle the chunked path is tested
+    against.  x: (b,l,h,p); dt: (b,l,h); A: (h,); B,C: (b,l,h,n)."""
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+
+    def step(state, inp):
+        x_t, dt_t, B_t, C_t = inp  # (b,h,p), (b,h), (b,h,n), (b,h,n)
+        dA = jnp.exp(dt_t * A)  # (b,h)
+        dBx = jnp.einsum("bhn,bhp,bh->bhpn", B_t, x_t, dt_t)
+        state = state * dA[..., None, None] + dBx
+        y = jnp.einsum("bhpn,bhn->bhp", state, C_t)
+        return state, y
+
+    state0 = jnp.zeros((b, h, p, n), jnp.float32)
+    xs = (
+        x.transpose(1, 0, 2, 3).astype(jnp.float32),
+        dt.transpose(1, 0, 2).astype(jnp.float32),
+        B.transpose(1, 0, 2, 3).astype(jnp.float32),
+        C.transpose(1, 0, 2, 3).astype(jnp.float32),
+    )
+    _, ys = jax.lax.scan(step, state0, xs)
+    return ys.transpose(1, 0, 2, 3)  # (b,l,h,p)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, return_state: bool = False):
+    """Chunked SSD (Mamba2 Listing 1, adapted to TPU-friendly einsums).
+
+    All SSD math runs in f32 for stability; inputs may be bf16.
+    x: (b,l,h,p); dt: (b,l,h); A: (h,) (negative); B,C: (b,l,h,n)."""
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    q = min(chunk, l)
+    assert l % q == 0, f"seq {l} not divisible by chunk {q}"
+    c = l // q
+    f32 = jnp.float32
+    xc = x.reshape(b, c, q, h, p).astype(f32)
+    dtc = dt.reshape(b, c, q, h).astype(f32)
+    Bc = B.reshape(b, c, q, h, n).astype(f32)
+    Cc = C.reshape(b, c, q, h, n).astype(f32)
+
+    dA = dtc * A  # (b,c,q,h), negative
+    dA_cs = jnp.cumsum(dA, axis=2)  # within-chunk cumulative
+
+    # -- intra-chunk (diagonal blocks): attention-like quadratic form -------
+    # decay matrix L[i,j] = exp(dA_cs[i] - dA_cs[j]) for i >= j
+    seg = dA_cs[:, :, :, None, :] - dA_cs[:, :, None, :, :]  # (b,c,qi,qj,h)
+    ii = jnp.arange(q)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    L = jnp.where(causal, jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Cc, Bc) * L
+    y_diag = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", scores, dtc, xc)
+
+    # -- chunk summary states -------------------------------------------------
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)  # (b,c,q,h)
+    S = jnp.einsum("bcqhn,bcqh,bcqh,bcqhp->bchpn", Bc, dtc, decay_to_end, xc)
+
+    # -- inter-chunk recurrence: carry states across chunks -------------------
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])  # (b,c,h)
+
+    def carry_fn(prev, inp):
+        S_c, g_c = inp  # (b,h,p,n), (b,h)
+        new = prev * g_c[..., None, None] + S_c
+        return new, prev  # emit the state ENTERING this chunk
+
+    S_t = S.transpose(1, 0, 2, 3, 4)  # (c,b,h,p,n)
+    g_t = chunk_decay.transpose(1, 0, 2)  # (c,b,h)
+    init = jnp.zeros((b, h, p, n), f32)
+    final_state, entering = jax.lax.scan(carry_fn, init, (S_t, g_t))
+    entering = entering.transpose(1, 0, 2, 3, 4)  # (b,c,h,p,n)
+
+    # -- off-diagonal contribution from carried state -------------------------
+    state_decay = jnp.exp(dA_cs)  # decay from chunk start to position i
+    y_off = jnp.einsum("bcihn,bchpn,bcih->bcihp", Cc, entering, state_decay)
+
+    y = (y_diag + y_off).reshape(b, l, h, p).astype(x.dtype)
+    if return_state:
+        return y, final_state
+    return y
+
+
+# =============================================================================
+# Mamba2 block
+# =============================================================================
+
+
+def _shapes(cfg: ArchConfig):
+    di = cfg.d_inner
+    g, n = cfg.ssm_n_groups, cfg.ssm_state
+    h = cfg.ssm_heads
+    conv_ch = di + 2 * g * n
+    return di, g, n, h, conv_ch
+
+
+def init_mamba_block(key, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    di, g, n, h, conv_ch = _shapes(cfg)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    proj_out = 2 * di + 2 * g * n + h  # z, x, B, C, dt
+    return {
+        "ln": cm.init_norm(d, cfg.norm, dt),
+        "in_proj": cm.init_dense(ks[0], d, proj_out, dt),
+        "conv_w": cm.trunc_normal(ks[1], (cfg.ssm_conv_width, conv_ch), 0.5 / math.sqrt(cfg.ssm_conv_width), dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((h,), 1e-2))).astype(jnp.float32) * 0
+        + jnp.asarray(
+            jnp.log(jnp.expm1(jnp.exp(jax.random.uniform(ks[2], (h,), minval=math.log(1e-3), maxval=math.log(1e-1))))),
+            jnp.float32,
+        ),
+        "norm": {"scale": jnp.ones((di,), dt)},
+        "out_proj": cm.init_dense(ks[3], di, d, dt),
+    }
+
+
+def _causal_conv(xBC, conv_w, conv_b):
+    """Depthwise causal conv over sequence.  xBC: (b, l, ch)."""
+    w = conv_w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (w - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xBC)
+    for i in range(w):  # width is tiny (4): unrolled taps, XLA fuses these
+        out = out + pad[:, i : i + xBC.shape[1], :] * conv_w[i][None, None, :]
+    return out + conv_b[None, None, :]
+
+
+def _split_proj(cfg, zxbcdt):
+    di, g, n, h, conv_ch = _shapes(cfg)
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di : di + conv_ch]
+    dt_raw = zxbcdt[..., di + conv_ch :]
+    return z, xBC, dt_raw
+
+
+def _ssm_inputs(cfg, xBC, dt_raw, p):
+    di, g, n, h, conv_ch = _shapes(cfg)
+    b, l = xBC.shape[:2]
+    xs = xBC[..., :di].reshape(b, l, h, cfg.ssm_head_dim)
+    Bm = xBC[..., di : di + g * n].reshape(b, l, g, n)
+    Cm = xBC[..., di + g * n :].reshape(b, l, g, n)
+    rep = h // g
+    Bm = jnp.repeat(Bm, rep, axis=2)
+    Cm = jnp.repeat(Cm, rep, axis=2)
+    dt_f = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    return xs, Bm, Cm, dt_f, A
+
+
+def mamba_block_apply(cfg: ArchConfig, p: dict, x: jax.Array) -> jax.Array:
+    """Full-sequence forward (train / prefill)."""
+    res = x
+    x = cm.norm_apply(p["ln"], x, cfg.norm, cfg.norm_eps)
+    zxbcdt = cm.dense(p["in_proj"], x)
+    z, xBC, dt_raw = _split_proj(cfg, zxbcdt)
+    xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"], p["conv_b"]))
+    xs, Bm, Cm, dt_f, A = _ssm_inputs(cfg, xBC, dt_raw, p)
+    xs = constrain(xs, logical("dp", None, "tp", None))
+    y = ssd_chunked(xs, dt_f, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + p["D"][None, None, :, None].astype(y.dtype) * xs
+    di = cfg.d_inner
+    y = y.reshape(*y.shape[:2], di)
+    y = cm.rmsnorm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), cfg.norm_eps)
+    out = cm.dense(p["out_proj"], y)
+    return constrain(res + out, logical("dp", "sp", None))
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int) -> dict:
+    di, g, n, h, conv_ch = _shapes(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), jnp.dtype(cfg.compute_dtype)),
+        "ssm": jnp.zeros((batch, h, cfg.ssm_head_dim, n), jnp.float32),
+    }
+
+
+def mamba_block_prefill(cfg: ArchConfig, p: dict, x: jax.Array):
+    """Full-sequence forward that ALSO returns the recurrent state after
+    the last position (for prefill -> decode handoff)."""
+    res = x
+    xn = cm.norm_apply(p["ln"], x, cfg.norm, cfg.norm_eps)
+    zxbcdt = cm.dense(p["in_proj"], xn)
+    z, xBC_raw, dt_raw = _split_proj(cfg, zxbcdt)
+    xBC = jax.nn.silu(_causal_conv(xBC_raw, p["conv_w"], p["conv_b"]))
+    xs, Bm, Cm, dt_f, A = _ssm_inputs(cfg, xBC, dt_raw, p)
+    y, final_state = ssd_chunked(xs, dt_f, A, Bm, Cm, cfg.ssm_chunk, return_state=True)
+    y = y + p["D"][None, None, :, None].astype(y.dtype) * xs
+    di = cfg.d_inner
+    y = y.reshape(*y.shape[:2], di)
+    y = cm.rmsnorm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), cfg.norm_eps)
+    out = cm.dense(p["out_proj"], y)
+    w = cfg.ssm_conv_width
+    conv_state = xBC_raw[:, -(w - 1):, :].astype(jnp.dtype(cfg.compute_dtype))
+    x_out = constrain(res + out, logical("dp", "sp", None))
+    return x_out, {"conv": conv_state, "ssm": final_state}
+
+
+def mamba_block_decode(cfg: ArchConfig, p: dict, state: dict, x: jax.Array):
+    """One-token step.  x: (b, 1, d).  Returns (out, new_state)."""
+    res = x
+    x = cm.norm_apply(p["ln"], x, cfg.norm, cfg.norm_eps)
+    zxbcdt = cm.dense(p["in_proj"], x)
+    z, xBC, dt_raw = _split_proj(cfg, zxbcdt)
+    # conv over the rolling window
+    window = jnp.concatenate([state["conv"], xBC], axis=1)  # (b, w, ch)
+    conv_out = jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"]
+    xBC = jax.nn.silu(conv_out)[:, None, :]
+    new_conv = window[:, 1:, :]
+    xs, Bm, Cm, dt_f, A = _ssm_inputs(cfg, xBC, dt_raw, p)
+    # single recurrent update
+    x_t = xs[:, 0].astype(jnp.float32)  # (b,h,p)
+    dt_t = dt_f[:, 0]  # (b,h)
+    B_t = Bm[:, 0].astype(jnp.float32)
+    C_t = Cm[:, 0].astype(jnp.float32)
+    dA = jnp.exp(dt_t * A)
+    new_ssm = state["ssm"] * dA[..., None, None] + jnp.einsum(
+        "bhn,bhp,bh->bhpn", B_t, x_t, dt_t
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", new_ssm, C_t).astype(x.dtype)
+    y = y + p["D"][None, :, None].astype(y.dtype) * xs[:, 0]
+    di = cfg.d_inner
+    y = y.reshape(y.shape[0], 1, di)
+    y = cm.rmsnorm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), cfg.norm_eps)
+    out = cm.dense(p["out_proj"], y)
+    return res + out, {"conv": new_conv.astype(state["conv"].dtype), "ssm": new_ssm}
+
+
+# =============================================================================
+# Mamba2 language model (attention-free)
+# =============================================================================
+
+
+def init_mamba_lm(cfg: ArchConfig, key) -> dict:
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    v, d = cfg.padded_vocab, cfg.d_model
+    layer_keys = jax.random.split(ks[2], cfg.n_layers)
+    return {
+        "embed": {"table": cm.trunc_normal(ks[0], (v, d), d ** -0.5, dt)},
+        "ln_f": cm.init_norm(d, cfg.norm, dt),
+        "head": {"w": cm.trunc_normal(ks[1], (d, v), 1.0 / math.sqrt(d), dt)},
+        "layers": jax.vmap(lambda k: init_mamba_block(k, cfg))(layer_keys),
+    }
+
+
+def _remat_wrap(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    policy = (
+        jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        if cfg.remat == "dots"
+        else None
+    )
+    return jax.checkpoint(fn, policy=policy)
+
+
+def mamba_lm_hidden(cfg: ArchConfig, params: dict, batch: dict):
+    from repro.models import transformer as tf
+
+    x = tf.embed_tokens(cfg, params, batch["tokens"])
+
+    def body(xc, layer_p):
+        return mamba_block_apply(cfg, layer_p, xc), None
+
+    body = _remat_wrap(cfg, body)
+    x, _ = cm.scan_or_unroll(cfg.scan_layers, body, x, params["layers"])
+    return x, jnp.zeros((), jnp.float32)
+
+
+def mamba_lm_forward(cfg: ArchConfig, params: dict, batch: dict):
+    from repro.models import transformer as tf
+
+    x, aux = mamba_lm_hidden(cfg, params, batch)
+    return tf.lm_logits(cfg, params, x), aux
+
+
+def mamba_lm_init_cache(cfg: ArchConfig, batch: int, max_len: int = 0) -> dict:
+    state = init_mamba_state(cfg, batch)
+    stacked = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape)), state
+    )
+    return {"layers": stacked, "len": jnp.zeros((), jnp.int32)}
+
+
+def mamba_lm_prefill(cfg: ArchConfig, params: dict, batch: dict, max_len: int = 0):
+    from repro.models import transformer as tf
+
+    x = tf.embed_tokens(cfg, params, batch["tokens"])
+
+    def body(xc, layer_p):
+        xc, st = mamba_block_prefill(cfg, layer_p, xc)
+        return xc, st
+
+    x, states = cm.scan_or_unroll(cfg.scan_layers, body, x, params["layers"])
+    logits = tf.lm_logits(cfg, params, x[:, -1:, :])
+    cache = {"layers": states, "len": jnp.asarray(x.shape[1], jnp.int32)}
+    return logits, cache
+
+
+def mamba_lm_decode_step(cfg: ArchConfig, params: dict, cache: dict, tokens: jax.Array):
+    from repro.models import transformer as tf
+
+    x = tf.embed_tokens(cfg, params, tokens)
+
+    def body(xc, scanned):
+        layer_p, st = scanned
+        xc, new_st = mamba_block_decode(cfg, layer_p, st, xc)
+        return xc, new_st
+
+    x, new_states = cm.scan_or_unroll(
+        cfg.scan_layers, body, x, (params["layers"], cache["layers"])
+    )
+    logits = tf.lm_logits(cfg, params, x)
+    return logits, {"layers": new_states, "len": cache["len"] + 1}

@@ -1,0 +1,23 @@
+from .adamw import AdamW, clip_by_global_norm, global_norm
+from .adafactor import Adafactor
+from .schedules import constant, warmup_cosine, warmup_linear
+
+
+def make_optimizer(name: str, lr, **kw):
+    if name == "adamw":
+        return AdamW(lr=lr, **kw)
+    if name == "adafactor":
+        return Adafactor(lr=lr, **kw)
+    raise ValueError(f"unknown optimizer {name}")
+
+
+__all__ = [
+    "AdamW",
+    "Adafactor",
+    "clip_by_global_norm",
+    "global_norm",
+    "constant",
+    "warmup_cosine",
+    "warmup_linear",
+    "make_optimizer",
+]

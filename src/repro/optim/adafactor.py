@@ -1,0 +1,83 @@
+"""Adafactor (Shazeer & Stern 2018) — factored second moments.
+
+Used for the two MoE giants (grok-1-314b, qwen3-moe-235b) where full
+AdamW state (12 bytes/param) would not fit the per-chip HBM budget at
+the assigned mesh; factored states are O(rows + cols) per matrix.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Adafactor"]
+
+
+def _rms(x):
+    return jnp.sqrt(jnp.mean(jnp.square(x)) + 1e-30)
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    lr: Callable[[jax.Array], jax.Array] | float = 1e-3
+    decay: float = 0.8  # beta2 exponent schedule: 1 - t^-decay
+    eps1: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr, jnp.float32)
+
+    def init(self, params) -> dict:
+        def leaf(p):
+            if p.ndim >= 2:
+                # factor over the two largest trailing dims
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "factored": jax.tree_util.tree_map(leaf, params),
+        }
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        beta2 = 1.0 - t ** (-self.decay)
+        lr = self._lr(step)
+
+        def upd(g, st, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + self.eps1
+            if p.ndim >= 2:
+                vr = beta2 * st["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * st["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                vr_norm = vr / jnp.maximum(
+                    jnp.mean(vr, axis=-1, keepdims=True), 1e-30
+                )
+                u = g * jax.lax.rsqrt(vr_norm)[..., None] * jax.lax.rsqrt(vc)[..., None, :]
+                new_st = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * st["v"] + (1 - beta2) * g2
+                u = g * jax.lax.rsqrt(v)
+                new_st = {"v": v}
+            u = u / jnp.maximum(1.0, _rms(u) / self.clip_threshold)
+            base = p.astype(jnp.float32)
+            if self.weight_decay and p.ndim >= 2:
+                u = u + self.weight_decay * base
+            return (base - lr * u).astype(p.dtype), new_st
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state["factored"])
+        out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        return (
+            treedef.unflatten([o[0] for o in out]),
+            {"step": step, "factored": treedef.unflatten([o[1] for o in out])},
+        )

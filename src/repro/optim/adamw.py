@@ -1,0 +1,94 @@
+"""AdamW with mixed-precision master weights (pure JAX, no optax).
+
+When params are bf16 the optimizer keeps f32 master copies and casts
+back after each update (standard large-model recipe); m/v are f32.
+ZeRO-1 sharding of the state is applied by the trainer via sharding
+constraints (see dist/sharding.py::zero1_state_specs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamW", "clip_by_global_norm", "global_norm"]
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr, jnp.float32)
+
+    def init(self, params) -> dict:
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        state = {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree_util.tree_map(f32, params),
+            "v": jax.tree_util.tree_map(f32, params),
+        }
+        # master weights only needed for low-precision params
+        if any(p.dtype != jnp.float32 for p in jax.tree_util.tree_leaves(params)):
+            state["master"] = jax.tree_util.tree_map(
+                lambda p: p.astype(jnp.float32), params
+            )
+        return state
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        lr = self._lr(step)
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1**t
+        bc2 = 1.0 - b2**t
+
+        def upd(g, m, v, p, master):
+            g = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * g * g
+            mhat = m2 / bc1
+            vhat = v2 / bc2
+            base = master if master is not None else p.astype(jnp.float32)
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if p.ndim >= 2:  # decay matrices only (norms/biases exempt)
+                delta = delta + self.weight_decay * base
+            new_master = base - lr * delta
+            return new_master.astype(p.dtype), m2, v2, new_master
+
+        masters = state.get("master")
+        if masters is None:
+            masters = jax.tree_util.tree_map(lambda p: None, params)
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_mst = treedef.flatten_up_to(masters) if state.get("master") else [None] * len(flat_p)
+        out = [upd(g, m, v, p, mst) for g, m, v, p, mst in zip(flat_g, flat_m, flat_v, flat_p, flat_mst)]
+        new_params = treedef.unflatten([o[0] for o in out])
+        new_state = {
+            "step": step,
+            "m": treedef.unflatten([o[1] for o in out]),
+            "v": treedef.unflatten([o[2] for o in out]),
+        }
+        if state.get("master") is not None:
+            new_state["master"] = treedef.unflatten([o[3] for o in out])
+        return new_params, new_state

@@ -1,0 +1,37 @@
+"""LR schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine", "constant", "warmup_linear"]
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(1, warmup_steps)
+        prog = jnp.clip((s - warmup_steps) / max(1, total_steps - warmup_steps), 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(math.pi * prog)))
+        return jnp.where(s < warmup_steps, warm, cos)
+
+    return fn
+
+
+def warmup_linear(peak_lr: float, warmup_steps: int, total_steps: int):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(1, warmup_steps)
+        lin = peak_lr * jnp.clip(
+            1.0 - (s - warmup_steps) / max(1, total_steps - warmup_steps), 0.0, 1.0
+        )
+        return jnp.where(s < warmup_steps, warm, lin)
+
+    return fn

@@ -1,0 +1,78 @@
+"""Train / serve step factories.
+
+``make_train_step`` builds the jit-able step: value_and_grad, optional
+microbatched gradient accumulation (lax.scan over microbatches — the
+accumulation structure also lets XLA overlap the cross-pod gradient
+reduction of microbatch i with the compute of i+1), global-norm clip,
+optimizer update.  Sharding enters via jit in/out shardings built in
+launch/dryrun.py / launch/train.py, plus the model's internal
+constraints.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model
+from repro.optim import clip_by_global_norm
+
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step"]
+
+
+def make_train_step(model: Model, optimizer, grad_accum: int = 1,
+                    clip_norm: float = 1.0):
+    def single_grads(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(
+            params, batch
+        )
+        return grads, metrics
+
+    def train_step(params, opt_state, batch):
+        if grad_accum <= 1:
+            grads, metrics = single_grads(params, batch)
+        else:
+            # split the batch into microbatches along dim 0 and scan
+            def micro(carry, mb):
+                acc = carry
+                g, m = single_grads(params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), acc, g
+                )
+                return acc, m
+
+            micro_batches = jax.tree_util.tree_map(
+                lambda a: a.reshape(grad_accum, a.shape[0] // grad_accum, *a.shape[1:]),
+                batch,
+            )
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            grads, ms = jax.lax.scan(micro, zeros, micro_batches)
+            grads = jax.tree_util.tree_map(lambda g: g / grad_accum, grads)
+            metrics = jax.tree_util.tree_map(lambda m: m.mean(axis=0), ms)
+
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        new_params, new_state = optimizer.update(grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model, max_len: int):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_len)
+
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    return decode_step

@@ -1,0 +1,176 @@
+"""Training loop: jit + sharding wiring, checkpoint/resume, straggler
+watchdog, failure injection, metrics logging (JSONL).
+
+The same Trainer drives single-device CPU integration tests and the
+512-way dry-run meshes — only the mesh/rules differ.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer, latest_step
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import DataPipeline
+from repro.dist import sharding as shd
+from repro.dist.api import MeshRules, mesh_context
+from repro.dist.fault import ChipFailure, FailureInjector, StragglerWatchdog
+from repro.models.api import Model
+from repro.optim import make_optimizer, warmup_cosine
+from repro.train.step import make_train_step
+
+__all__ = ["Trainer"]
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        pipeline: DataPipeline,
+        ckpt_dir: str,
+        mesh=None,
+        rules: Optional[MeshRules] = None,
+        lr: float = 3e-4,
+        warmup_steps: int = 20,
+        total_steps: int = 1000,
+        grad_accum: int = 1,
+        clip_norm: float = 1.0,
+        ckpt_every: int = 50,
+        log_path: Optional[str] = None,
+        watchdog: Optional[StragglerWatchdog] = None,
+        injector: Optional[FailureInjector] = None,
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.model = Model(cfg)
+        self.pipeline = pipeline
+        self.mesh = mesh
+        self.rules = rules or MeshRules()
+        self.ckpt = Checkpointer(ckpt_dir)
+        self.ckpt_every = ckpt_every
+        self.log_path = log_path
+        self.watchdog = watchdog
+        self.injector = injector
+        self.seed = seed
+        self.optimizer = make_optimizer(
+            cfg.optimizer, warmup_cosine(lr, warmup_steps, total_steps)
+        )
+        self.train_step_fn = make_train_step(
+            self.model, self.optimizer, grad_accum=grad_accum, clip_norm=clip_norm
+        )
+        self._compiled = None
+        self.step = 0
+        self.params = None
+        self.opt_state = None
+        self.metrics_log: list[dict] = []
+
+    # ------------------------------------------------------------------
+    def _shardings(self):
+        if self.mesh is None:
+            return None, None
+        abs_params = self.model.abstract_params()
+        pspecs = shd.param_specs(self.cfg, abs_params, self.mesh, self.rules)
+        psh = jax.tree_util.tree_map(
+            lambda s: jax.sharding.NamedSharding(self.mesh, s), pspecs
+        )
+        abs_state = jax.eval_shape(self.optimizer.init, abs_params)
+        osh = shd.opt_state_shardings(
+            self.cfg.optimizer, abs_state, pspecs, self.mesh, self.rules
+        )
+        return psh, osh
+
+    def initialize(self, resume: bool = True) -> None:
+        psh, osh = self._shardings()
+        if resume and latest_step(self.ckpt.directory) is not None:
+            abs_params = self.model.abstract_params()
+            abs_state = jax.eval_shape(self.optimizer.init, abs_params)
+            tree, meta = self.ckpt.restore(
+                {"params": abs_params, "opt": abs_state},
+                shardings={"params": psh, "opt": osh} if psh is not None else None,
+            )
+            self.params, self.opt_state = tree["params"], tree["opt"]
+            self.step = int(meta["step"])
+            self.pipeline.load_state_dict(meta["pipeline"])
+            return
+        key = jax.random.PRNGKey(self.seed)
+        if self.mesh is not None:
+            init = jax.jit(self.model.init_params, out_shardings=psh)
+            self.params = init(key)
+            self.opt_state = jax.jit(self.optimizer.init, out_shardings=osh)(self.params)
+        else:
+            self.params = self.model.init_params(key)
+            self.opt_state = self.optimizer.init(self.params)
+        self.step = 0
+
+    def _get_step_fn(self):
+        if self._compiled is None:
+            psh, osh = self._shardings()
+            if self.mesh is not None:
+                self._compiled = jax.jit(
+                    self.train_step_fn,
+                    in_shardings=(psh, osh, None),
+                    out_shardings=(psh, osh, None),
+                    donate_argnums=(0, 1),
+                )
+            else:
+                self._compiled = jax.jit(self.train_step_fn, donate_argnums=(0, 1))
+        return self._compiled
+
+    def _save(self):
+        self.ckpt.save(
+            self.step,
+            {"params": self.params, "opt": self.opt_state},
+            metadata={"step": self.step, "pipeline": self.pipeline.state_dict()},
+        )
+
+    def _log(self, record: dict):
+        self.metrics_log.append(record)
+        if self.log_path:
+            with open(self.log_path, "a") as f:
+                f.write(json.dumps(record) + "\n")
+
+    # ------------------------------------------------------------------
+    def train(self, num_steps: int, resume: bool = True):
+        if self.params is None:
+            self.initialize(resume=resume)
+        step_fn = self._get_step_fn()
+        ctx = mesh_context(self.mesh, self.rules) if self.mesh is not None else None
+        if ctx is not None:
+            ctx.__enter__()
+        try:
+            it = iter(self.pipeline)
+            while self.step < num_steps:
+                batch = next(it)
+                if self.injector is not None:
+                    self.injector.maybe_fail(self.step)
+                t0 = time.monotonic()
+                self.params, self.opt_state, metrics = step_fn(
+                    self.params, self.opt_state, batch
+                )
+                jax.block_until_ready(metrics["loss"])
+                dur = time.monotonic() - t0
+                self.step += 1
+                if self.watchdog is not None:
+                    self.watchdog.observe(self.step, dur)
+                rec = {
+                    "step": self.step,
+                    "loss": float(metrics["loss"]),
+                    "ce": float(metrics.get("ce", metrics["loss"])),
+                    "grad_norm": float(metrics["grad_norm"]),
+                    "step_time_s": dur,
+                }
+                self._log(rec)
+                if self.step % self.ckpt_every == 0 or self.step == num_steps:
+                    self._save()
+            self.ckpt.wait()
+            return self.metrics_log
+        finally:
+            self.pipeline.stop()
+            if ctx is not None:
+                ctx.__exit__(None, None, None)

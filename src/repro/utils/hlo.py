@@ -1,0 +1,162 @@
+"""Post-SPMD HLO text analysis: collective bytes per device.
+
+``collective_stats(hlo_text)`` scans every computation, resolves operand
+shapes from their defining lines, and sums operand bytes per collective
+kind (all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute).  Shapes in the partitioned module are shard-local,
+so the totals are per-device wire bytes (algorithmic ring factors are
+applied in utils/roofline.py, not here).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+__all__ = ["collective_stats", "parse_shape_bytes", "COLLECTIVE_KINDS"]
+
+COLLECTIVE_KINDS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def parse_shape_bytes(shape_str: str) -> int:
+    """Bytes of one (possibly tuple) HLO shape string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+# one HLO instruction:  %name = <shape> opcode(...operands...)
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s*([\w\-]+)\("
+)
+_OPERAND_RE = re.compile(r"%?([\w.\-]+)")
+
+
+_GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def collective_stats(hlo_text: str, tpu_equivalence: bool = True) -> dict:
+    """Returns {kind: {"count": int, "operand_bytes": int,
+    "result_bytes": int}} plus a "total_operand_bytes" rollup.
+
+    ``tpu_equivalence`` applies two corrections for XLA:CPU lowering
+    artifacts so the numbers reflect what the TPU backend would emit:
+      * bf16 all-reduces are promoted to f32 on CPU (the reduction
+        computation is named ``*_promoted``) — payload halved back;
+      * CPU skips the all-reduce+dynamic-slice -> reduce-scatter fusion;
+        an all-reduce whose every consumer is a (tuple-element +)
+        dynamic-slice of 1/group_size is counted as a reduce-scatter
+        (operand bytes / group_size)."""
+    shapes: dict[str, str] = {}
+    lines = hlo_text.splitlines()
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if m:
+            shapes[m.group(1)] = m.group(2)
+
+    # consumer map: producer name -> list of (opcode, result_shape)
+    consumers: dict[str, list] = defaultdict(list)
+    if tpu_equivalence:
+        for ln in lines:
+            m = _DEF_RE.match(ln)
+            if not m:
+                continue
+            res_name, res_shape, opcode = m.group(1), m.group(2), m.group(3)
+            paren = ln.find(opcode + "(")
+            if paren < 0:
+                continue
+            seg = ln[paren + len(opcode) + 1 :]
+            for mm in re.finditer(r"%([\w.\-]+)", seg.split("),")[0]):
+                consumers[mm.group(1)].append((opcode, res_shape, res_name))
+
+    stats: dict[str, dict] = defaultdict(
+        lambda: {"count": 0, "operand_bytes": 0, "result_bytes": 0}
+    )
+
+    def _slice_only(name: str, depth: int = 0) -> bool:
+        """All consumers are dynamic-slice (possibly via get-tuple-element)."""
+        cons = consumers.get(name, [])
+        if not cons:
+            return False
+        for opcode, _shape, res in cons:
+            if opcode == "dynamic-slice":
+                continue
+            if opcode == "get-tuple-element" and depth < 1:
+                if not _slice_only(res, depth + 1):
+                    return False
+                continue
+            return False
+        return True
+
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        name, shape_str, op = m.group(1), m.group(2), m.group(3)
+        kind = None
+        for k in COLLECTIVE_KINDS:
+            if op == k or op.startswith(k):
+                kind = k
+                break
+        if kind is None:
+            continue
+        # operands: tokens inside the first top-level paren group
+        start = ln.find(op + "(") + len(op) + 1
+        depth = 1
+        end = start
+        while end < len(ln) and depth > 0:
+            if ln[end] == "(":
+                depth += 1
+            elif ln[end] == ")":
+                depth -= 1
+            end += 1
+        operand_str = ln[start : end - 1]
+        op_bytes = 0
+        for tok in operand_str.split(","):
+            tok = tok.strip()
+            mm = re.match(r"^%?([\w.\-]+)$", tok)
+            if mm and mm.group(1) in shapes:
+                op_bytes += parse_shape_bytes(shapes[mm.group(1)])
+        res_bytes = parse_shape_bytes(shape_str)
+
+        if tpu_equivalence and kind == "all-reduce":
+            if "promoted" in ln:  # CPU promoted a bf16 payload to f32
+                op_bytes //= 2
+                res_bytes //= 2
+            gm = _GROUP_RE.search(ln)
+            group = int(gm.group(2)) if gm else 1
+            if group > 1 and _slice_only(name):
+                kind = "reduce-scatter"  # TPU fuses AR+DS -> RS
+                op_bytes //= group
+                res_bytes //= group
+
+        st = stats[kind]
+        st["count"] += 1
+        st["operand_bytes"] += op_bytes
+        st["result_bytes"] += res_bytes
+
+    out = {k: dict(v) for k, v in stats.items()}
+    out["total_operand_bytes"] = sum(v["operand_bytes"] for v in stats.values())
+    return out

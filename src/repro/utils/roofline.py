@@ -1,0 +1,102 @@
+"""Roofline math for the dry-run (TPU v5e constants per assignment).
+
+Three terms, all in seconds, derived from the compiled artifact:
+
+  compute   = HLO_FLOPs_per_device / peak_FLOP/s
+  memory    = HLO_bytes_per_device / HBM_bw
+  collective= wire_bytes_per_device / link_bw      (ring factors applied)
+
+``cost_analysis()`` of a partitioned executable reports per-device
+numbers (verified empirically in tests/test_roofline.py), so no extra
+division by chip count is applied here; the assignment's
+"HLO_FLOPs / (chips × peak)" is the same quantity computed from the
+global pre-partition FLOPs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+__all__ = ["V5E", "RooflineTerms", "roofline_from_costs", "model_flops"]
+
+
+@dataclasses.dataclass(frozen=True)
+class V5E:
+    peak_flops: float = 197e12  # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9  # B/s per chip
+    ici_bw: float = 50e9  # B/s per link (≈ per-axis ring bandwidth)
+    hbm_bytes: float = 16e9  # capacity per chip
+
+
+# ring-algorithm wire factors (fraction of payload actually serialized
+# on the slowest link): all-reduce moves ~2x the shard, gather/scatter ~1x
+_WIRE_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+    model_flops: float  # 6·N·D (or serve-step equivalent)
+    useful_ratio: float  # model_flops / (flops_per_device × chips)
+    dominant: str
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def roofline_from_costs(
+    flops_per_device: float,
+    bytes_per_device: float,
+    collective: dict,
+    chips: int,
+    mflops: float,
+    hw: V5E = V5E(),
+) -> RooflineTerms:
+    wire = 0.0
+    for kind, factor in _WIRE_FACTOR.items():
+        st = collective.get(kind)
+        if st:
+            wire += factor * st["operand_bytes"]
+    compute_s = flops_per_device / hw.peak_flops
+    memory_s = bytes_per_device / hw.hbm_bw
+    collective_s = wire / hw.ici_bw
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    total_flops = flops_per_device * chips
+    return RooflineTerms(
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        flops_per_device=flops_per_device,
+        bytes_per_device=bytes_per_device,
+        wire_bytes_per_device=wire,
+        model_flops=mflops,
+        useful_ratio=(mflops / total_flops) if total_flops else 0.0,
+        dominant=dominant,
+    )
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS per the assignment: 6·N·D for training (N = params,
+    MoE: active params), 2·N·D for a forward-only prefill, 2·N per token
+    for decode (D = tokens processed in the step)."""
+    n = cfg.n_active_params()
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * tokens
+    # decode: one token per sequence in the batch
+    return 2.0 * n * shape.global_batch

@@ -1,0 +1,120 @@
+"""Configuration-space tests: paper-exact sizes + MDP invariants
+(property-based via hypothesis)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import GemmConfigSpace, TilingState
+from repro.core.config_space import compositions_pow2, count_compositions_pow2
+
+
+def test_paper_space_sizes():
+    # the paper reports these counts for d=(4,2,4) (Sec. 5 / Fig. 8)
+    assert GemmConfigSpace(512, 512, 512).size() == 484_000
+    assert GemmConfigSpace(1024, 1024, 1024).size() == 899_756
+    assert GemmConfigSpace(2048, 2048, 2048).size() == 1_589_952
+
+
+def test_enumeration_matches_count(small_space):
+    states = list(small_space.enumerate())
+    assert len(states) == small_space.size()
+    assert len({s.key() for s in states}) == len(states)
+    for s in states[:50]:
+        assert small_space.is_legitimate(s)
+
+
+def test_initial_state_is_paper_s0(paper_space):
+    s0 = paper_space.initial_state()
+    assert s0.as_lists() == [[1024, 1, 1, 1], [1024, 1], [1024, 1, 1, 1]]
+    assert paper_space.is_legitimate(s0)
+
+
+def test_action_space_size(paper_space):
+    # d_m=4 -> 12 ordered pairs, d_k=2 -> 2, d_n=4 -> 12
+    assert paper_space.n_actions == 26
+
+
+def test_compositions_pow2_count():
+    for value, parts in [(64, 4), (1024, 2), (96, 3)]:
+        assert len(list(compositions_pow2(value, parts))) == count_compositions_pow2(
+            value, parts
+        )
+
+
+@st.composite
+def space_and_state(draw):
+    em = draw(st.integers(2, 6))
+    ek = draw(st.integers(2, 6))
+    en = draw(st.integers(2, 6))
+    space = GemmConfigSpace(2**em, 2**ek, 2**en)
+    import random
+
+    rng = random.Random(draw(st.integers(0, 10_000)))
+    state = space.random_state(rng)
+    return space, state
+
+
+@given(space_and_state())
+@settings(max_examples=60, deadline=None)
+def test_actions_preserve_products(pair):
+    """Eqn. 6 moves keep every dimension's product exact (the core
+    legitimacy invariant)."""
+    space, s = pair
+    dims = s.dims()
+    for a in space.actions:
+        s2 = space.step(s, a)
+        if s2 is not None:
+            assert s2.dims() == dims
+            assert space.is_legitimate(s2)
+
+
+@given(space_and_state())
+@settings(max_examples=60, deadline=None)
+def test_neighbor_symmetry(pair):
+    """Every move has an inverse: s' in g(s) implies s in g(s')."""
+    space, s = pair
+    for s2 in space.neighbors(s):
+        back_keys = {b.key() for b in space.neighbors(s2)}
+        assert s.key() in back_keys
+
+
+@given(space_and_state())
+@settings(max_examples=60, deadline=None)
+def test_random_state_legitimate_and_features_finite(pair):
+    space, s = pair
+    assert space.is_legitimate(s)
+    f = space.features(s)
+    assert f.shape == (space.n_features,)
+    assert all(map(math.isfinite, f.tolist()))
+
+
+def test_reachability_closure(small_space):
+    """BFS from s0 under the action set reaches exactly the enumerated
+    space (paper: 'guaranteed to visit all configuration states')."""
+    seen = {small_space.initial_state().key()}
+    frontier = [small_space.initial_state()]
+    while frontier:
+        s = frontier.pop()
+        for s2 in small_space.neighbors(s):
+            if s2.key() not in seen:
+                seen.add(s2.key())
+                frontier.append(s2)
+    assert len(seen) == small_space.size()
+
+
+def test_state_key_roundtrip(paper_space):
+    s = paper_space.initial_state()
+    s2 = TilingState.from_lists(s.as_lists())
+    assert s2 == s and s2.key() == s.key()
+
+
+def test_tpu_mapping_views():
+    s = TilingState((2, 4, 8, 16), (4, 256), (2, 8, 8, 8))
+    assert s.grid == (2, 4, 2)
+    assert s.block_m == 4 * 8 * 16
+    assert s.block_k == 256
+    assert s.block_n == 8 * 8 * 8
+    assert s.sub_m == 8 * 16 and s.sub_n == 64
+    assert s.reg_m == 16 and s.reg_n == 8

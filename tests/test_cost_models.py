@@ -1,0 +1,82 @@
+"""Cost-backend tests: analytical model physics + measured backends."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import AnalyticalTPUCost, CountingCost, GemmConfigSpace, TilingState
+from repro.core.cost.measured import PallasInterpretCost, XLATimedCost
+
+
+def test_vmem_cliff(small_space):
+    """Configurations whose working set exceeds VMEM fail like a TVM
+    measurement failure (inf)."""
+    cost = AnalyticalTPUCost(small_space)
+    # block everything into one giant tile on a big space -> exceeds VMEM
+    big = GemmConfigSpace(4096, 4096, 4096)
+    cost_big = AnalyticalTPUCost(big)
+    s = TilingState((1, 1, 1, 4096), (1, 4096), (1, 1, 1, 4096))
+    assert math.isinf(cost_big.cost(s))
+    # the no-tiling initial state is legitimate but slow, not inf
+    c0 = cost_big.cost(big.initial_state())
+    assert math.isfinite(c0)
+
+
+def test_alignment_penalty(small_space):
+    """Lane-misaligned (bn % 128 != 0) tiles cost more than aligned ones
+    with the same traffic."""
+    sp = GemmConfigSpace(1024, 1024, 1024)
+    cost = AnalyticalTPUCost(sp)
+    aligned = TilingState((8, 1, 1, 128), (2, 512), (8, 1, 1, 128))
+    misaligned = TilingState((8, 1, 2, 64), (2, 512), (16, 1, 2, 32))
+    assert cost.compute_time(aligned) <= cost.compute_time(misaligned)
+
+
+def test_noise_determinism(paper_space):
+    c1 = AnalyticalTPUCost(paper_space, noise_sigma=0.1, seed=7, n_repeats=3)
+    c2 = AnalyticalTPUCost(paper_space, noise_sigma=0.1, seed=7, n_repeats=3)
+    s = paper_space.initial_state()
+    assert c1.cost(s) == c2.cost(s)
+    c3 = AnalyticalTPUCost(paper_space, noise_sigma=0.1, seed=8, n_repeats=3)
+    assert c1.cost(s) != c3.cost(s)
+
+
+def test_noiseless_cost_reproducible_and_positive(small_space):
+    cost = AnalyticalTPUCost(small_space)
+    for s in list(small_space.enumerate())[:100]:
+        c = cost.cost(s)
+        assert c > 0
+
+
+def test_counting_cost_tracks_trials(small_space):
+    inner = AnalyticalTPUCost(small_space)
+    cc = CountingCost(inner, simulated_overhead_s=0.5)
+    s = small_space.initial_state()
+    cc.cost(s)
+    cc.cost(s)
+    assert cc.n_measured == 2
+    assert cc.simulated_clock_s > 1.0
+
+
+def test_brute_force_optimum_is_minimum(small_space):
+    cost = AnalyticalTPUCost(small_space)
+    best_s, best_c = cost.optimum()
+    for s in small_space.enumerate():
+        assert cost.cost(s) >= best_c - 1e-18
+
+
+@pytest.mark.slow
+def test_xla_timed_cost_runs():
+    sp = GemmConfigSpace(128, 128, 128)
+    cost = XLATimedCost(sp, n_repeats=1)
+    c = cost.cost(TilingState((2, 1, 1, 64), (2, 64), (2, 1, 1, 64)))
+    assert 0 < c < 10
+
+
+@pytest.mark.slow
+def test_pallas_interpret_cost_runs():
+    sp = GemmConfigSpace(128, 128, 128)
+    cost = PallasInterpretCost(sp)
+    c = cost.cost(TilingState((2, 1, 1, 64), (1, 128), (2, 1, 1, 64)))
+    assert 0 < c < 60

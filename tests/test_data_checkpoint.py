@@ -1,0 +1,153 @@
+"""Data pipeline determinism/sharding + checkpointer atomicity, keep-N,
+and elastic restore."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpointer import Checkpointer, latest_step
+from repro.data.pipeline import DataPipeline, SyntheticLM
+
+
+def test_pipeline_deterministic():
+    ds = SyntheticLM(vocab_size=100, seq_len=16, seed=3)
+    p1 = DataPipeline(ds, global_batch=8)
+    p2 = DataPipeline(ds, global_batch=8)
+    b1, b2 = p1.build_batch(5), p2.build_batch(5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = p1.build_batch(6)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+
+def test_pipeline_host_sharding_disjoint():
+    ds = SyntheticLM(vocab_size=1000, seq_len=8, seed=0)
+    full = DataPipeline(ds, global_batch=8).build_batch(2)
+    halves = [
+        DataPipeline(ds, global_batch=8, process_index=i, process_count=2).build_batch(2)
+        for i in range(2)
+    ]
+    stacked = np.concatenate([h["tokens"] for h in halves])
+    np.testing.assert_array_equal(full["tokens"], stacked)
+
+
+def test_pipeline_labels_are_next_token():
+    ds = SyntheticLM(vocab_size=50, seq_len=10, seed=1, noise=0.0)
+    t, l = ds.sample(7)
+    assert t.shape == (10,) and l.shape == (10,)
+    # with zero noise, label[i] follows the same stride as t
+    stride = (l[0] - t[0]) % 50
+    assert all(((l[i] - t[i]) % 50) == stride for i in range(10))
+
+
+def test_pipeline_prefetch_and_resume():
+    ds = SyntheticLM(vocab_size=100, seq_len=4, seed=0)
+    p = DataPipeline(ds, global_batch=4, prefetch=2)
+    it = iter(p)
+    batches = [next(it) for _ in range(3)]
+    p.stop()
+    state = p.state_dict()
+    p2 = DataPipeline(ds, global_batch=4, start_step=0)
+    p2.load_state_dict(state)
+    nxt = p2.build_batch(p2.step)
+    expected = DataPipeline(ds, global_batch=4).build_batch(3)
+    np.testing.assert_array_equal(nxt["tokens"], expected["tokens"])
+
+
+# -----------------------------------------------------------------------------
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {"w": jnp.asarray(rng.standard_normal((8, 4)), jnp.float32)},
+        "opt": {"step": jnp.asarray(3, jnp.int32)},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    tree = _tree()
+    ck.save(10, tree, metadata={"step": 10, "pipeline": {"step": 10, "seed": 0}})
+    abstract = jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree
+    )
+    restored, meta = ck.restore(abstract)
+    assert meta["step"] == 10
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"]), np.asarray(tree["params"]["w"])
+    )
+
+
+def test_checkpoint_async_and_keep_n(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep_n=2, async_save=True)
+    for s in [1, 2, 3, 4]:
+        ck.save(s, _tree(s), metadata={"step": s})
+    ck.wait()
+    steps = sorted(
+        int(n.split("_")[1]) for n in os.listdir(tmp_path) if n.startswith("step_")
+    )
+    assert steps == [3, 4]
+    assert latest_step(str(tmp_path)) == 4
+
+
+def test_checkpoint_atomicity_marker(tmp_path):
+    """A directory without COMMIT is ignored (crashed mid-write)."""
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    ck.save(5, _tree(), metadata={"step": 5})
+    # fake a torn write at step 6
+    os.makedirs(tmp_path / "step_00000006")
+    with open(tmp_path / "step_00000006" / "manifest.json", "w") as f:
+        json.dump({}, f)
+    assert latest_step(str(tmp_path)) == 5
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    ck.save(1, _tree(), metadata={})
+    bad = {
+        "params": {"w": jax.ShapeDtypeStruct((4, 4), jnp.float32)},
+        "opt": {"step": jax.ShapeDtypeStruct((), jnp.int32)},
+    }
+    with pytest.raises(ValueError):
+        ck.restore(bad)
+
+
+def test_checkpoint_elastic_reshard_subprocess(tmp_path):
+    """Save on an 8-device (4,2) mesh, restore onto (2,4) — the elastic
+    path (different shard layout, same logical arrays)."""
+    import subprocess
+    import sys
+
+    script = f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, {json.dumps(os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src")))})
+import jax, numpy as np
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.checkpoint.checkpointer import Checkpointer
+
+d = {json.dumps(str(tmp_path))}
+mesh1 = jax.make_mesh((4, 2), ("data", "model"))
+w = jnp.arange(64.0, dtype=jnp.float32).reshape(8, 8)
+w1 = jax.device_put(w, NamedSharding(mesh1, P("data", "model")))
+ck = Checkpointer(d, async_save=False)
+ck.save(1, {{"w": w1}}, metadata={{"step": 1}})
+
+mesh2 = jax.make_mesh((2, 4), ("data", "model"))
+sh2 = {{"w": NamedSharding(mesh2, P("model", "data"))}}
+restored, _ = ck.restore({{"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)}}, shardings=sh2)
+assert restored["w"].sharding.is_equivalent_to(sh2["w"], 2)
+np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(w))
+print("ELASTIC_OK")
+"""
+    out = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True, timeout=240
+    )
+    assert "ELASTIC_OK" in out.stdout, out.stderr[-2000:]

@@ -1,0 +1,99 @@
+"""HLO collective parser + roofline math unit tests."""
+
+import numpy as np
+import pytest
+
+from repro.utils.hlo import collective_stats, parse_shape_bytes
+from repro.utils.roofline import V5E, model_flops, roofline_from_costs
+
+
+def test_parse_shape_bytes():
+    assert parse_shape_bytes("f32[4,8]") == 128
+    assert parse_shape_bytes("bf16[1024]") == 2048
+    assert parse_shape_bytes("(f32[2,2], bf16[4])") == 16 + 8
+    assert parse_shape_bytes("pred[]") == 1
+    assert parse_shape_bytes("f32[16,256,4096]{2,0,1}") == 16 * 256 * 4096 * 4
+
+
+SYNTHETIC_HLO = """
+HloModule test
+ENTRY %main {
+  %p0 = f32[128,64]{1,0} parameter(0)
+  %p1 = f32[64,64]{1,0} parameter(1)
+  %ag = f32[512,64]{1,0} all-gather(%p0), replica_groups=[4,4]<=[16], dimensions={0}
+  %ar = f32[64,64]{1,0} all-reduce(%p1), replica_groups=[2,8]<=[16], to_apply=%add
+  %rs = f32[32,64]{1,0} reduce-scatter(%p1), replica_groups=[2,8]<=[16], dimensions={0}
+  %cp = f32[128,64]{1,0} collective-permute(%p0), source_target_pairs={{0,1}}
+  ROOT %out = f32[128,64]{1,0} add(%cp, %cp)
+}
+"""
+
+
+def test_collective_stats_synthetic():
+    st = collective_stats(SYNTHETIC_HLO, tpu_equivalence=False)
+    assert st["all-gather"]["count"] == 1
+    assert st["all-gather"]["operand_bytes"] == 128 * 64 * 4
+    assert st["all-gather"]["result_bytes"] == 512 * 64 * 4
+    assert st["all-reduce"]["operand_bytes"] == 64 * 64 * 4
+    assert st["reduce-scatter"]["count"] == 1
+    assert st["collective-permute"]["operand_bytes"] == 128 * 64 * 4
+    assert st["total_operand_bytes"] == (128 * 64 + 64 * 64 + 64 * 64 + 128 * 64) * 4
+
+
+PROMOTED_HLO = """
+HloModule test2
+ENTRY %main {
+  %p1 = f32[64,64]{1,0} parameter(0)
+  %ar = f32[64,64]{1,0} all-reduce(%p1), replica_groups=[2,8]<=[16], to_apply=%add.clone_promoted
+  %ds = f32[8,64]{1,0} dynamic-slice(%ar, %c0, %c1), dynamic_slice_sizes={8,64}
+  ROOT %out = f32[8,64]{1,0} add(%ds, %ds)
+}
+"""
+
+
+def test_tpu_equivalence_corrections():
+    raw = collective_stats(PROMOTED_HLO, tpu_equivalence=False)
+    assert raw["all-reduce"]["operand_bytes"] == 64 * 64 * 4
+    fixed = collective_stats(PROMOTED_HLO, tpu_equivalence=True)
+    # promoted f32 payload halved back to bf16 AND AR+slice -> RS (/8)
+    assert "all-reduce" not in fixed
+    assert fixed["reduce-scatter"]["operand_bytes"] == 64 * 64 * 4 // 2 // 8
+
+
+def test_roofline_terms_and_dominance():
+    coll = {"all-reduce": {"operand_bytes": 1e9, "count": 1, "result_bytes": 1e9}}
+    t = roofline_from_costs(
+        flops_per_device=197e12,  # exactly 1 second of compute
+        bytes_per_device=819e9 * 2,  # 2 seconds of HBM
+        collective=coll,
+        chips=256,
+        mflops=197e12 * 256 * 0.5,
+    )
+    np.testing.assert_allclose(t.compute_s, 1.0)
+    np.testing.assert_allclose(t.memory_s, 2.0)
+    np.testing.assert_allclose(t.collective_s, 2e9 / 50e9)  # ring factor 2
+    assert t.dominant == "memory"
+    np.testing.assert_allclose(t.useful_ratio, 0.5)
+
+
+def test_model_flops_kinds():
+    from repro.configs.registry import get_arch
+    from repro.configs.base import SHAPES
+
+    cfg = get_arch("yi-6b")
+    n = cfg.n_active_params()
+    t_train = model_flops(cfg, SHAPES["train_4k"])
+    assert t_train == 6.0 * n * 4096 * 256
+    t_pre = model_flops(cfg, SHAPES["prefill_32k"])
+    assert t_pre == 2.0 * n * 32768 * 32
+    t_dec = model_flops(cfg, SHAPES["decode_32k"])
+    assert t_dec == 2.0 * n * 128
+
+
+def test_moe_active_params_less_than_total():
+    from repro.configs.registry import get_arch
+
+    cfg = get_arch("qwen3-moe-235b-a22b")
+    assert cfg.n_active_params() < 0.2 * cfg.n_params()
+    dense = get_arch("yi-6b")
+    assert dense.n_active_params() == dense.n_params()

@@ -1,0 +1,100 @@
+"""Optimizer tests: AdamW / Adafactor convergence, mixed precision,
+clipping, schedules."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import (
+    Adafactor,
+    AdamW,
+    clip_by_global_norm,
+    constant,
+    global_norm,
+    make_optimizer,
+    warmup_cosine,
+    warmup_linear,
+)
+
+
+def _quadratic_params(dtype=jnp.float32):
+    return {
+        "w": jnp.asarray([[2.0, -3.0], [1.5, 0.5]], dtype),
+        "b": jnp.asarray([1.0, -1.0], dtype),
+    }
+
+
+@pytest.mark.parametrize("opt_name", ["adamw", "adafactor"])
+def test_optimizer_reduces_quadratic(opt_name):
+    opt = make_optimizer(opt_name, 0.05)
+    params = _quadratic_params()
+    state = opt.init(params)
+
+    def loss_fn(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+
+    l0 = float(loss_fn(params))
+    for _ in range(60):
+        grads = jax.grad(loss_fn)(params)
+        params, state = opt.update(grads, state, params)
+    assert float(loss_fn(params)) < 0.2 * l0
+
+
+def test_adamw_mixed_precision_master_weights():
+    params = jax.tree_util.tree_map(
+        lambda a: a.astype(jnp.bfloat16), _quadratic_params()
+    )
+    opt = AdamW(lr=1e-3)
+    state = opt.init(params)
+    assert "master" in state
+    assert all(
+        m.dtype == jnp.float32 for m in jax.tree_util.tree_leaves(state["master"])
+    )
+    grads = jax.tree_util.tree_map(lambda a: jnp.ones_like(a), params)
+    new_params, new_state = opt.update(grads, state, params)
+    # bf16 params update, master tracks in f32
+    assert all(p.dtype == jnp.bfloat16 for p in jax.tree_util.tree_leaves(new_params))
+    # tiny lr accumulates in master even when bf16 can't represent the delta
+    for _ in range(3):
+        new_params, new_state = opt.update(grads, new_state, new_params)
+    m = new_state["master"]["w"]
+    assert float(jnp.max(jnp.abs(m - state["master"]["w"]))) > 0
+
+
+def test_adafactor_state_is_factored():
+    params = {"w": jnp.zeros((64, 32)), "b": jnp.zeros((64,))}
+    opt = Adafactor(lr=1e-3)
+    state = opt.init(params)
+    assert state["factored"]["w"]["vr"].shape == (64,)
+    assert state["factored"]["w"]["vc"].shape == (32,)
+    assert state["factored"]["b"]["v"].shape == (64,)
+    # factored memory << AdamW memory for matrices
+    adam_bytes = 2 * 64 * 32 * 4
+    fact_bytes = (64 + 32) * 4
+    assert fact_bytes < adam_bytes / 10
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full((10,), 3.0), "b": jnp.full((10,), 4.0)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    np.testing.assert_allclose(float(norm), np.sqrt(10 * 9 + 10 * 16), rtol=1e-6)
+    np.testing.assert_allclose(float(global_norm(clipped)), 1.0, rtol=1e-5)
+    # below threshold: unchanged
+    unclipped, _ = clip_by_global_norm(tree, 1e9)
+    np.testing.assert_allclose(np.asarray(unclipped["a"]), np.asarray(tree["a"]))
+
+
+def test_schedules():
+    for sched in [
+        warmup_cosine(1e-3, 10, 100),
+        warmup_linear(1e-3, 10, 100),
+        constant(1e-3),
+    ]:
+        vals = [float(sched(jnp.asarray(s))) for s in range(0, 101, 5)]
+        assert all(v >= 0 for v in vals)
+        assert max(vals) <= 1e-3 + 1e-9
+    wc = warmup_cosine(1e-3, 10, 100)
+    assert float(wc(jnp.asarray(5))) < 1e-3  # warming up
+    assert float(wc(jnp.asarray(100))) < float(wc(jnp.asarray(20)))  # decaying

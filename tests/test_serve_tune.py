@@ -1,0 +1,61 @@
+"""Serving engine + tune launcher smoke tests."""
+
+import numpy as np
+
+import jax
+
+from repro.configs.registry import get_arch
+from repro.launch.serve import ServeEngine
+from repro.launch.tune import workloads_for_arch
+from repro.models.api import Model
+
+
+def test_serve_engine_generates():
+    cfg = get_arch("yi-6b").reduced()
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, params, max_batch=2, max_len=24)
+    prompts = np.arange(2 * 8, dtype=np.int32).reshape(2, 8) % cfg.vocab_size
+    out = engine.generate(prompts, gen_tokens=4)
+    assert out.shape == (2, 4)
+    assert (out >= 0).all() and (out < cfg.vocab_size).all()
+    # greedy decoding is deterministic
+    out2 = engine.generate(prompts, gen_tokens=4)
+    np.testing.assert_array_equal(out, out2)
+
+
+def test_workloads_for_arch_cover_block_gemms():
+    wls = workloads_for_arch("qwen2-72b", "train_4k")
+    labels = {w.label.split("/")[-1] for w in wls}
+    assert {"qkv", "attn_out", "ffn_in", "ffn_out", "lm_head"} <= labels
+    for w in wls:
+        assert w.m > 0 and w.k > 0 and w.n > 0
+
+    moe_wls = workloads_for_arch("qwen3-moe-235b-a22b", "train_4k")
+    moe_labels = {w.label.split("/")[-1] for w in moe_wls}
+    assert {"expert_in", "expert_out", "router"} <= moe_labels
+
+    ssm_wls = workloads_for_arch("mamba2-130m", "train_4k")
+    ssm_labels = {w.label.split("/")[-1] for w in ssm_wls}
+    assert {"ssm_in", "ssm_out"} <= ssm_labels
+
+
+def test_tune_cli_writes_records(tmp_path):
+    import sys
+
+    from repro.launch import tune as tune_mod
+
+    argv = sys.argv
+    sys.argv = [
+        "tune", "--arch", "whisper-tiny", "--shape", "train_4k",
+        "--tuner", "g-bfs", "--max-trials", "40", "--fraction", "1.0",
+        "--records", str(tmp_path / "r.json"),
+    ]
+    try:
+        tune_mod.main()
+    finally:
+        sys.argv = argv
+    from repro.core.records import TuningRecords
+
+    rec = TuningRecords(str(tmp_path / "r.json"))
+    assert len(rec) >= 3

@@ -1,0 +1,73 @@
+"""End-to-end behaviour tests for the paper's system: the full
+tune -> record -> dispatch -> execute flow, exactly as a user drives it."""
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import (
+    AnalyticalTPUCost,
+    Budget,
+    GemmConfigSpace,
+    GemmWorkload,
+    TuningRecords,
+    TuningSession,
+    set_global_records,
+    global_records,
+    workload_key,
+)
+from repro.kernels import ops
+from repro.kernels.ref import ref_gemm
+
+
+def test_end_to_end_tune_record_dispatch(tmp_path):
+    """TuningSession finds a config, persists it, ops.gemm picks it up,
+    the Pallas kernel computes the right answer with it."""
+    old = global_records()
+    try:
+        records = TuningRecords(str(tmp_path / "r.json"))
+        session = TuningSession(records, verbose=False)
+        wl = GemmWorkload(128, 128, 128, dtype="float32")
+        res = session.tune_workload(wl, "g-bfs", Budget(max_fraction=0.05))
+        assert res.best_state is not None
+        key = workload_key(128, 128, 128, "float32")
+        assert records.lookup_state(key) is not None
+
+        # a fresh process would reload the same records file
+        records2 = TuningRecords(str(tmp_path / "r.json"))
+        assert records2.lookup_state(key).key() == records.lookup_state(key).key()
+
+        set_global_records(records2)
+        ops.set_kernel_policy(ops.KernelPolicy(use_pallas=True, interpret=True))
+        rng = np.random.default_rng(0)
+        a = jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)
+        out = ops.gemm(a, b)
+        err = float(jnp.max(jnp.abs(out - ref_gemm(a, b))))
+        assert err < 1e-3
+    finally:
+        set_global_records(old)
+        ops.set_kernel_policy(ops.KernelPolicy())
+
+
+def test_session_compare_protocol():
+    """Paper-style head-to-head comparison under one budget."""
+    session = TuningSession(verbose=False)
+    wl = GemmWorkload(64, 64, 64)
+    out = session.compare(wl, ["g-bfs", "random"], Budget(max_trials=60), n_seeds=2)
+    assert set(out) == {"g-bfs", "random"}
+    for results in out.values():
+        assert len(results) == 2
+        for r in results:
+            assert r.n_trials <= 60
+
+
+def test_records_keep_best(tmp_path):
+    records = TuningRecords(str(tmp_path / "r.json"))
+    space = GemmConfigSpace(64, 64, 64)
+    s1, s2 = space.initial_state(), space.random_state(__import__("random").Random(0))
+    key = workload_key(64, 64, 64)
+    assert records.update(key, s1, 2.0, "a", 1)
+    assert not records.update(key, s2, 3.0, "b", 1)  # worse: rejected
+    assert records.update(key, s2, 1.0, "b", 1)  # better: accepted
+    assert records.best_cost(key) == 1.0
