@@ -18,7 +18,7 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import AnalyticalTPUCost, Budget, GemmConfigSpace
+from repro.core import AnalyticalTPUCost, Budget, GemmConfigSpace, MeasureEngine, workload_key
 from repro.core.tuners import TUNERS
 
 PAPER_TUNERS = ["g-bfs", "n-a2c", "xgboost-like", "rnn-controller"]
@@ -41,10 +41,25 @@ def true_cost(space: GemmConfigSpace, state) -> float:
 
 
 def run_tuner(space, tuner_name: str, budget: Budget, seed: int = 0,
-              noise: float = 0.1):
+              noise: float = 0.1, n_workers: int = 1, journal=None):
+    """One tuning run under the paper protocol.  ``n_workers`` spreads
+    each proposed candidate batch over parallel engine lanes (the trial
+    sequence is unchanged; only the simulated clock compresses);
+    ``journal`` plugs in a persistent trial cache."""
     cost = make_cost(space, seed=seed, noise=noise)
+    engine = None
+    if journal is not None or n_workers > 1:
+        engine = MeasureEngine(
+            cost,
+            n_workers=n_workers,
+            journal=journal,
+            workload_key=workload_key(space.m, space.k, space.n, "bfloat16", cost.name),
+        )
     tuner = TUNERS[tuner_name](space, cost, seed=seed, **TUNER_KW.get(tuner_name, {}))
-    res = tuner.tune(budget, overhead_s=0.35)
+    if engine is not None:
+        res = tuner.tune(budget, engine=engine)  # engine owns the clock model
+    else:
+        res = tuner.tune(budget, overhead_s=0.35, n_workers=n_workers)
     final = (
         true_cost(space, res.best_state) if res.best_state is not None else math.inf
     )

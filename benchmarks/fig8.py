@@ -5,6 +5,13 @@
 8b: distribution (min/q1/median/mean/q3/max) of the best cost found
     within a fixed search-time budget (750 simulated seconds), 10 trials
     on (1024,1024,1024).
+
+Each fig8a row carries the engine's worker count and cache-hit rate
+(``workers=…,cache_hit=…``) so any clock difference between runs is
+attributable; fig8b emits one ``fig8bengine`` row per tuner.  NOTE:
+under a *time* budget (8b), ``--workers > 1`` genuinely changes the
+search — the compressed clock lets every tuner afford more trials
+before the budget expires.
 """
 
 from __future__ import annotations
@@ -16,33 +23,46 @@ from repro.core import Budget, GemmConfigSpace
 from .common import PAPER_TUNERS, run_tuner
 
 
-def fig8a(tuners=None, seeds: int = 3) -> dict:
+def fig8a(tuners=None, seeds: int = 3, n_workers: int = 1) -> dict:
     tuners = tuners or PAPER_TUNERS
     out = {}
     for size in (512, 1024, 2048):
         space = GemmConfigSpace(size, size, size)
         for tuner in tuners:
-            finals = [
-                run_tuner(space, tuner, Budget(max_fraction=0.001), seed=s)[1]
-                for s in range(seeds)
-            ]
+            finals, hits, trials = [], 0, 0
+            for s in range(seeds):
+                res, final = run_tuner(
+                    space, tuner, Budget(max_fraction=0.001), seed=s,
+                    n_workers=n_workers,
+                )
+                finals.append(final)
+                hits += res.n_cache_hits
+                trials += res.n_trials
             mean = sum(finals) / len(finals)
             out[(size, tuner)] = mean
-            print(f"fig8a,{size},{tuner},{mean*1e6:.3f}", flush=True)
+            print(
+                f"fig8a,{size},{tuner},{mean*1e6:.3f},"
+                f"workers={n_workers},cache_hit={hits / max(1, trials):.3f}",
+                flush=True,
+            )
     return out
 
 
-def fig8b(tuners=None, trials: int = 10, time_budget_s: float = 750.0) -> dict:
+def fig8b(tuners=None, trials: int = 10, time_budget_s: float = 750.0,
+          n_workers: int = 1) -> dict:
     tuners = tuners or PAPER_TUNERS
     space = GemmConfigSpace(1024, 1024, 1024)
     out = {}
     for tuner in tuners:
-        finals = []
+        finals, hits, n_meas = [], 0, 0
         for seed in range(trials):
-            _, final = run_tuner(
-                space, tuner, Budget(max_time_s=time_budget_s), seed=seed
+            res, final = run_tuner(
+                space, tuner, Budget(max_time_s=time_budget_s), seed=seed,
+                n_workers=n_workers,
             )
             finals.append(final * 1e6)
+            hits += res.n_cache_hits
+            n_meas += res.n_trials
         finals.sort()
         q = statistics.quantiles(finals, n=4)
         row = {
@@ -61,15 +81,27 @@ def fig8b(tuners=None, trials: int = 10, time_budget_s: float = 750.0) -> dict:
             f"q3={row['q3']:.3f},max={row['max']:.3f},std={row['stdev']:.3f}",
             flush=True,
         )
+        print(
+            f"fig8bengine,{tuner},workers={n_workers},"
+            f"cache_hit={hits / max(1, n_meas):.3f},mean_trials={n_meas / max(1, trials):.0f}",
+            flush=True,
+        )
     return out
 
 
-def main(quick: bool = False):
-    a = fig8a(seeds=1 if quick else 3)
+def main(quick: bool = False, n_workers: int = 1):
+    a = fig8a(seeds=1 if quick else 3, n_workers=n_workers)
     b = fig8b(trials=3 if quick else 10,
-              time_budget_s=300.0 if quick else 750.0)
+              time_budget_s=300.0 if quick else 750.0,
+              n_workers=n_workers)
     return a, b
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--workers", type=int, default=1)
+    args = ap.parse_args()
+    main(quick=args.quick, n_workers=args.workers)

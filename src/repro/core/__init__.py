@@ -10,8 +10,16 @@ Public surface:
 
 from .config_space import Action, GemmConfigSpace, TilingState
 from .cost import AnalyticalTPUCost, CostBackend, CountingCost, TpuSpec
-from .records import TuningRecords, global_records, set_global_records, workload_key
-from .session import GemmWorkload, TuningSession
+from .measure import MeasureEngine, MeasureOutcome, MeasureStats
+from .records import (
+    TrialJournal,
+    TuningRecords,
+    global_records,
+    parse_workload_key,
+    set_global_records,
+    workload_key,
+)
+from .session import ArchTuneReport, GemmWorkload, TuningSession
 from .tuners import (
     TUNERS,
     Budget,
@@ -31,10 +39,16 @@ __all__ = [
     "CostBackend",
     "CountingCost",
     "TpuSpec",
+    "MeasureEngine",
+    "MeasureOutcome",
+    "MeasureStats",
+    "TrialJournal",
     "TuningRecords",
     "global_records",
+    "parse_workload_key",
     "set_global_records",
     "workload_key",
+    "ArchTuneReport",
     "GemmWorkload",
     "TuningSession",
     "TUNERS",

@@ -285,6 +285,43 @@ class GemmConfigSpace:
                 return s
         return self.initial_state()
 
+    def transplant(self, s: TilingState) -> Optional[TilingState]:
+        """Map a state tuned for *another* workload into this space —
+        the warm-start translation.
+
+        Tiling quality is carried by the inner factors (VMEM block, MXU
+        sub-tile, register granularity), which transfer across GEMM
+        shapes; the grid factor merely covers whatever dimension is
+        left.  So: keep the donor's inner factors (resized to this
+        space's nesting depth, register factor kept innermost), shrink
+        them until their product divides the new dimension, and absorb
+        the remainder — including the dimension's odd part, which keeps
+        the state inside the reachable set — into the grid factor.
+        Returns None when no legitimate translation exists.
+        """
+        dims = (self.m, self.k, self.n)
+        depths = (self.d_m, self.d_k, self.d_n)
+        rows = []
+        for row, dim, d in zip(s.as_lists(), dims, depths):
+            inner = list(row[1:])
+            if len(inner) > d - 1:  # merge overflow into the outermost inner slot
+                keep = len(inner) - (d - 1)
+                inner = [math.prod(inner[: keep + 1])] + inner[keep + 1:]
+            while len(inner) < d - 1:  # pad outermost, keep register innermost
+                inner.insert(0, 1)
+            for _ in range(64):
+                p = math.prod(inner) if inner else 1
+                if p >= 1 and dim % p == 0:
+                    break
+                big = max(range(len(inner)), key=lambda i: inner[i])
+                inner[big] = inner[big] // 2 if inner[big] % 2 == 0 else 1
+            p = math.prod(inner) if inner else 1
+            if dim % p != 0:
+                inner, p = [1] * (d - 1), 1
+            rows.append([dim // p] + inner)
+        s2 = TilingState.from_lists(rows)
+        return s2 if self.is_legitimate(s2) else None
+
     # -- featurization (for surrogate / policy models) ------------------------
     FEATURE_NAMES = None  # set lazily per space
 

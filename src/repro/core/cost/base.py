@@ -2,6 +2,22 @@
 hardware" abstraction (TVM measure).  Backends return seconds-per-GEMM;
 ``math.inf`` marks a configuration that fails to build/run (illegitimate
 on the hardware), matching how TVM reports failed measurements.
+
+Backends expose two entry points:
+
+* ``cost(s)`` — one state, the historical serial path;
+* ``batch_cost(states)`` — a *batch* of states for the measurement
+  engine's parallel lanes.  The base implementation is a serial loop
+  (always correct); concrete backends override it with something
+  genuinely concurrent: :class:`AnalyticalTPUCost` vectorizes the model
+  with numpy, :class:`XLATimedCost` compiles candidates on a thread
+  pool, and :class:`CountingCost` advances its simulated clock by the
+  per-wave *maximum* lane time so ``n_workers`` parallel lanes are
+  modeled honestly.
+
+Whatever the override, ``batch_cost(states)[i]`` must equal
+``cost(states[i])`` for a fresh backend — batching changes time
+accounting, never values.
 """
 
 from __future__ import annotations
@@ -42,16 +58,41 @@ class CostBackend(abc.ABC):
         return total / self.n_repeats
 
     def batch_cost(self, states: Sequence[TilingState]) -> list[float]:
+        """Measure a batch; value-equivalent to ``[cost(s) for s in states]``."""
         return [self.cost(s) for s in states]
+
+    def measure_fingerprint(self) -> str:
+        """Identifies the backend's *measurement settings* (not just its
+        name), so persistent caches never serve a cost measured under
+        different settings — e.g. a different noise model or repeat
+        count — as if it were this backend's measurement."""
+        return f"r{self.n_repeats}"
 
 
 class CountingCost(CostBackend):
     """Wraps another backend, counting measurements and charging a
     simulated (or real) wall-clock per trial — used by the benchmark
     harness to reproduce the paper's cost-vs-time plots without real
-    hardware time."""
+    hardware time.
 
-    def __init__(self, inner: CostBackend, simulated_overhead_s: float = 0.35):
+    ``n_workers`` models parallel measurement lanes: a batched call is
+    split into waves of ``n_workers`` states and each wave advances the
+    simulated clock by its *maximum* lane time, so the clock of a
+    parallel harness agrees with what ``TuningContext`` charges.  Each
+    lane's charge is capped at ``timeout_s`` (AutoTVM-style measurement
+    timeout), matching ``TuningContext.measure_timeout_s`` — without the
+    cap, a pathological config (e.g. the untiled s0) charges minutes of
+    simulated time here while the context charges 4 s, and the two
+    clocks diverge.
+    """
+
+    def __init__(
+        self,
+        inner: CostBackend,
+        simulated_overhead_s: float = 0.35,
+        timeout_s: float = 4.0,
+        n_workers: int = 1,
+    ):
         super().__init__(inner.space, n_repeats=1)
         self.inner = inner
         self.name = f"counting({inner.name})"
@@ -62,17 +103,33 @@ class CountingCost(CostBackend):
         # paper's Fig 7b horizontal axis is dominated by this, not by the
         # GEMM itself.
         self.simulated_overhead_s = simulated_overhead_s
+        self.timeout_s = timeout_s
+        self.n_workers = max(1, n_workers)
 
     def cost_once(self, s: TilingState, repeat_idx: int) -> float:  # pragma: no cover
         raise RuntimeError("CountingCost delegates via cost()")
 
+    def _lane_s(self, c: float) -> float:
+        t = self.simulated_overhead_s
+        if math.isfinite(c):
+            t += min(c * self.inner.n_repeats, self.timeout_s)
+        return t
+
     def cost(self, s: TilingState) -> float:
         c = self.inner.cost(s)
         self.n_measured += 1
-        self.simulated_clock_s += self.simulated_overhead_s
-        if math.isfinite(c):
-            self.simulated_clock_s += c * self.inner.n_repeats
+        self.simulated_clock_s += self._lane_s(c)
         return c
+
+    def batch_cost(self, states: Sequence[TilingState]) -> list[float]:
+        out: list[float] = []
+        for i in range(0, len(states), self.n_workers):
+            wave = states[i : i + self.n_workers]
+            costs = self.inner.batch_cost(wave)
+            self.n_measured += len(wave)
+            self.simulated_clock_s += max(self._lane_s(c) for c in costs)
+            out.extend(costs)
+        return out
 
     def fraction_explored(self) -> float:
         return self.n_measured / max(1, self.space.size())

@@ -8,7 +8,10 @@ These backends do the honest equivalent available in this container:
   dynamic-sliced blocks, k innermost with VMEM-style accumulation) and
   times it.  Different tilings genuinely run at different speeds on the
   CPU cache hierarchy, so the search problem is real, just on a different
-  memory system than the TPU target.
+  memory system than the TPU target.  ``batch_cost`` compiles a batch's
+  candidates concurrently on a thread pool (XLA compilation releases the
+  GIL) and then times them serially — timing in parallel would contend
+  for cores and corrupt the measurements.
 
 * :class:`PallasInterpretCost` — times the actual Pallas kernel
   (`repro.kernels.gemm`) in ``interpret=True`` mode.  Functionally
@@ -43,6 +46,7 @@ class XLATimedCost(CostBackend):
         dtype: str = "float32",
         vmem_guard_bytes: int = 16 * 1024 * 1024,
         seed: int = 0,
+        n_build_workers: int = 4,
     ):
         super().__init__(space, n_repeats)
         import jax
@@ -51,6 +55,7 @@ class XLATimedCost(CostBackend):
         self._jax, self._jnp = jax, jnp
         self.dtype = dtype
         self.vmem_guard_bytes = vmem_guard_bytes
+        self.n_build_workers = max(1, n_build_workers)
         rng = np.random.default_rng(seed)
         self._A = jnp.asarray(
             rng.standard_normal((space.m, space.k)), dtype=dtype
@@ -85,23 +90,57 @@ class XLATimedCost(CostBackend):
 
         return jax.jit(fn)
 
-    def cost_once(self, s: TilingState, repeat_idx: int) -> float:
-        jnp = self._jnp
-        itemsize = jnp.dtype(self.dtype).itemsize
-        bm, bk, bn = s.block_m, s.block_k, s.block_n
+    def _fits_vmem(self, s: TilingState) -> bool:
         # Honor the TPU VMEM legitimacy constraint so the searched space
         # matches what the Pallas kernel would accept on hardware.
-        if 2 * (bm * bk + bk * bn) * itemsize + bm * bn * 4 > self.vmem_guard_bytes:
+        itemsize = self._jnp.dtype(self.dtype).itemsize
+        bm, bk, bn = s.block_m, s.block_k, s.block_n
+        return (
+            2 * (bm * bk + bk * bn) * itemsize + bm * bn * 4
+            <= self.vmem_guard_bytes
+        )
+
+    def _build_and_warm(self, s: TilingState):
+        fn = self._build(s)
+        fn(self._A, self._B).block_until_ready()  # compile + warmup
+        return fn
+
+    def cost_once(self, s: TilingState, repeat_idx: int) -> float:
+        if not self._fits_vmem(s):
             return math.inf
         key = s.key()
         fn = self._cache.get(key)
         if fn is None:
-            fn = self._build(s)
+            fn = self._build_and_warm(s)
             self._cache[key] = fn
-            fn(self._A, self._B).block_until_ready()  # compile + warmup
         t0 = time.perf_counter()
         fn(self._A, self._B).block_until_ready()
         return time.perf_counter() - t0
+
+    def batch_cost(self, states) -> list[float]:
+        """Compile the batch's unbuilt candidates on a thread pool, then
+        time each serially (parallel timing would contend for cores)."""
+        from concurrent.futures import ThreadPoolExecutor
+
+        states = list(states)
+        todo, seen = [], set()
+        for s in states:
+            key = s.key()
+            if (
+                key not in self._cache
+                and key not in seen
+                and self.space.is_legitimate(s)
+                and self._fits_vmem(s)
+            ):
+                todo.append(s)
+                seen.add(key)
+        if len(todo) > 1:
+            workers = min(self.n_build_workers, len(todo))
+            with ThreadPoolExecutor(max_workers=workers) as ex:
+                futures = [(s.key(), ex.submit(self._build_and_warm, s)) for s in todo]
+                for key, fut in futures:
+                    self._cache[key] = fut.result()
+        return [self.cost(s) for s in states]
 
 
 class PallasInterpretCost(CostBackend):

@@ -1,10 +1,20 @@
-"""Tuning-record store: persisted best configurations per GEMM workload.
+"""Tuning-record store: persisted best configurations per GEMM workload,
+plus the persistent trial journal the measurement engine caches from.
 
-This is the compile-time artifact the framework ships — the analogue of
-AutoTVM's tophub tables.  ``kernels/ops.py`` consults the process-global
-store at trace time to pick the Pallas BlockSpec config for each matmul
-shape; ``launch/tune.py`` writes it.  Records are plain JSON for
-diffability and survive crashes via atomic replace.
+Two artifacts live here:
+
+* :class:`TuningRecords` — the keep-best table the framework ships (the
+  analogue of AutoTVM's tophub).  ``kernels/ops.py`` consults the
+  process-global store at trace time to pick the Pallas BlockSpec config
+  for each matmul shape; ``launch/tune.py`` writes it.  Plain JSON for
+  diffability; crash-safe via atomic replace.
+* :class:`TrialJournal` — an append-only JSONL log of *every*
+  measurement ever taken, keyed by workload.  The
+  :class:`~repro.core.measure.MeasureEngine` consults it before
+  dispatching to hardware, so repeat queries — within a session, across
+  sessions, or across workloads that share GEMM shapes — are served from
+  cache; ``TuningSession`` also uses it to warm-start a workload from
+  the nearest previously-tuned shape.
 """
 
 from __future__ import annotations
@@ -12,19 +22,38 @@ from __future__ import annotations
 import json
 import math
 import os
+import re
 import tempfile
 import threading
 import time
-from typing import Optional
+from typing import Iterable, Optional
 
 from .config_space import TilingState
 
-__all__ = ["TuningRecords", "workload_key", "global_records", "set_global_records"]
+__all__ = [
+    "TuningRecords",
+    "TrialJournal",
+    "workload_key",
+    "parse_workload_key",
+    "global_records",
+    "set_global_records",
+]
 
 
 def workload_key(m: int, k: int, n: int, dtype: str = "bfloat16",
                  backend: str = "analytical_tpu_v5e") -> str:
     return f"gemm/m{m}k{k}n{n}/{dtype}/{backend}"
+
+
+_KEY_RE = re.compile(r"^gemm/m(\d+)k(\d+)n(\d+)/([^/]+)/(.+)$")
+
+
+def parse_workload_key(key: str) -> Optional[tuple[int, int, int, str, str]]:
+    """Inverse of :func:`workload_key`: ``(m, k, n, dtype, backend)``."""
+    m = _KEY_RE.match(key)
+    if m is None:
+        return None
+    return int(m.group(1)), int(m.group(2)), int(m.group(3)), m.group(4), m.group(5)
 
 
 class TuningRecords:
@@ -95,6 +124,125 @@ class TuningRecords:
         finally:
             if os.path.exists(tmp):
                 os.unlink(tmp)
+
+
+class TrialJournal:
+    """Append-only measurement log: ``(workload, state) -> cost``.
+
+    Persists as JSONL (one row per measurement) so concurrent engines can
+    append without rewriting, torn tail lines from a crash are simply
+    skipped on reload, and the file is greppable.  The in-memory view is
+    a per-workload cost table plus a running best (state, cost) pair used
+    for warm starts.  ``math.inf`` costs (failed builds) are journaled
+    too — knowing a config fails is exactly as cacheable as knowing its
+    runtime.
+    """
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self._lock = threading.Lock()
+        self._costs: dict[str, dict[str, float]] = {}
+        self._best: dict[str, tuple[float, list]] = {}
+        self._fh = None
+        if path and os.path.exists(path):
+            with open(path) as f:
+                for line in f:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        row = json.loads(line)
+                        self._ingest(row["w"], row["k"], row["s"], float(row["c"]))
+                    except (ValueError, KeyError):
+                        continue  # torn tail write from a crashed session
+
+    # -- read ------------------------------------------------------------------
+    def get(self, workload: str, state_key: str) -> Optional[float]:
+        return self._costs.get(workload, {}).get(state_key)
+
+    def n_trials(self, workload: str) -> int:
+        return len(self._costs.get(workload, ()))
+
+    def workloads(self) -> Iterable[str]:
+        return self._costs.keys()
+
+    def __len__(self) -> int:
+        return sum(len(d) for d in self._costs.values())
+
+    def best_state(self, workload: str) -> Optional[tuple[TilingState, float]]:
+        rec = self._best.get(workload)
+        if rec is None:
+            return None
+        cost, lists = rec
+        return TilingState.from_lists(lists), cost
+
+    def nearest_workload(
+        self,
+        m: int,
+        k: int,
+        n: int,
+        dtype: Optional[str] = None,
+        backend: Optional[str] = None,
+        exclude: Optional[str] = None,
+    ) -> Optional[str]:
+        """The previously-journaled workload closest to ``(m, k, n)`` in
+        log-shape space — the warm-start donor for a new shape."""
+        best_key, best_d = None, math.inf
+        for key in self._costs:
+            if key == exclude or key not in self._best:
+                continue
+            parsed = parse_workload_key(key)
+            if parsed is None:
+                continue
+            m2, k2, n2, dt2, be2 = parsed
+            if backend is not None and be2 != backend:
+                continue
+            if dtype is not None and dt2 != dtype:
+                continue
+            d = (
+                abs(math.log2(m2 / m))
+                + abs(math.log2(k2 / k))
+                + abs(math.log2(n2 / n))
+            )
+            if d < best_d:
+                best_key, best_d = key, d
+        return best_key
+
+    # -- write -----------------------------------------------------------------
+    def _ingest(self, workload: str, state_key: str, state_lists: list,
+                cost: float) -> bool:
+        table = self._costs.setdefault(workload, {})
+        if state_key in table:
+            return False
+        table[state_key] = cost
+        if math.isfinite(cost):
+            best = self._best.get(workload)
+            if best is None or cost < best[0]:
+                self._best[workload] = (cost, state_lists)
+        return True
+
+    def record(self, workload: str, state: TilingState, cost: float) -> None:
+        with self._lock:
+            lists = state.as_lists()
+            if not self._ingest(workload, state.key(), lists, cost):
+                return
+            if self.path:
+                if self._fh is None:
+                    d = os.path.dirname(os.path.abspath(self.path))
+                    os.makedirs(d, exist_ok=True)
+                    self._fh = open(self.path, "a")
+                json.dump(
+                    {"w": workload, "k": state.key(), "s": lists, "c": cost},
+                    self._fh,
+                )
+                self._fh.write("\n")
+                self._fh.flush()
+
+    def close(self) -> None:
+        with self._lock:
+            if self._fh is not None:
+                self._fh.close()
+                self._fh = None
 
 
 _GLOBAL = TuningRecords()

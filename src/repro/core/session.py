@@ -1,23 +1,42 @@
 """Tuning sessions: run one-or-many tuners over one-or-many GEMM
-workloads, persist best configs, and emit comparison tables.
+workloads through the batched measurement engine, persist the results,
+and emit comparison tables.
 
 ``TuningSession`` is what `launch/tune.py` and the benchmark harness
-drive; it is also the integration point for per-architecture tuning
-(``workloads_for_arch`` extracts every distinct GEMM an ArchConfig
-executes and tunes each)."""
+drive.  It owns the two persistence layers — the keep-best
+:class:`TuningRecords` table that `kernels/ops.py` consults at trace
+time, and the append-only :class:`TrialJournal` that the
+:class:`~repro.core.measure.MeasureEngine` serves repeat measurements
+from across sessions — and wires both into every search it launches:
+
+* :meth:`tune_workload` builds a per-workload engine (``n_workers``
+  measurement lanes + shared journal) and can **warm-start** the search
+  from the best record of this workload, or — via
+  ``GemmConfigSpace.transplant`` — from the *nearest previously-tuned
+  shape* in log-shape space;
+* :meth:`tune_arch` fans every distinct GEMM an ArchConfig executes
+  through one shared engine budget: duplicate shapes are tuned once,
+  the trial/time budget is a single pool split over the remaining
+  workloads, and engine statistics (dispatches, cache hits) aggregate
+  across the whole arch so speedups are attributable;
+* :meth:`compare` runs the paper-style head-to-head under an identical
+  budget.
+"""
 
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import math
 from typing import Callable, Optional, Sequence
 
-from .config_space import GemmConfigSpace
+from .config_space import GemmConfigSpace, TilingState
 from .cost import AnalyticalTPUCost, CostBackend
-from .records import TuningRecords, workload_key
+from .measure import MeasureEngine, MeasureStats
+from .records import TrialJournal, TuningRecords, parse_workload_key, workload_key
 from .tuners import TUNERS, Budget, TuneResult
 
-__all__ = ["GemmWorkload", "TuningSession"]
+__all__ = ["GemmWorkload", "TuningSession", "ArchTuneReport"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,6 +57,33 @@ class GemmWorkload:
         return workload_key(self.m, self.k, self.n, self.dtype, backend)
 
 
+@dataclasses.dataclass
+class ArchTuneReport:
+    """What ``tune_arch`` hands back: per-label results + engine totals."""
+
+    results: dict[str, TuneResult]
+    stats: MeasureStats
+    n_workers: int
+    n_unique_shapes: int
+
+    @property
+    def total_trials(self) -> int:
+        return sum(r.n_trials for r in self.distinct_results())
+
+    @property
+    def total_clock_s(self) -> float:
+        return sum(r.clock_s for r in self.distinct_results())
+
+    def distinct_results(self) -> list[TuneResult]:
+        seen: set[int] = set()
+        out = []
+        for r in self.results.values():
+            if id(r) not in seen:
+                seen.add(id(r))
+                out.append(r)
+        return out
+
+
 class TuningSession:
     def __init__(
         self,
@@ -45,6 +91,7 @@ class TuningSession:
         cost_factory: Optional[Callable[[GemmConfigSpace], CostBackend]] = None,
         seed: int = 0,
         verbose: bool = True,
+        journal: Optional[TrialJournal] = None,
     ):
         # NOTE: TuningRecords defines __len__, so an EMPTY store is falsy —
         # `records or TuningRecords()` would silently drop it
@@ -54,7 +101,69 @@ class TuningSession:
         )
         self.seed = seed
         self.verbose = verbose
+        # persistent measurement cache; None disables cross-session serving
+        self.journal = journal
 
+    # -- warm start ----------------------------------------------------------
+    def warm_start_state(
+        self,
+        wl: GemmWorkload,
+        space: GemmConfigSpace,
+        backend_name: str,
+        fingerprint: Optional[str] = None,
+    ) -> Optional[TilingState]:
+        """Initial state for a warm-started search: this workload's own
+        best record if one exists, else the best state of the nearest
+        previously-tuned shape transplanted into this space.
+        ``fingerprint`` scopes the journal search to entries measured
+        under the same backend settings (see ``measure_fingerprint``)."""
+        wkey = wl.key(backend_name)
+        s = self.records.lookup_state(wkey)
+        if s is not None and space.is_legitimate(s):
+            return s
+        donors: list[tuple[float, str, TilingState]] = []
+        for key in self.records.keys():
+            parsed = parse_workload_key(key)
+            if parsed is None or key == wkey:
+                continue
+            m2, k2, n2, _dt, be2 = parsed
+            if be2 != backend_name:
+                continue
+            src = self.records.lookup_state(key)
+            if src is None:
+                continue
+            d = (
+                abs(math.log2(m2 / wl.m))
+                + abs(math.log2(k2 / wl.k))
+                + abs(math.log2(n2 / wl.n))
+            )
+            donors.append((d, key, src))
+        if self.journal is not None:
+            jbackend = (
+                backend_name if fingerprint is None else f"{backend_name}?{fingerprint}"
+            )
+            near = self.journal.nearest_workload(
+                wl.m, wl.k, wl.n, backend=jbackend,
+                exclude=wkey if fingerprint is None else f"{wkey}?{fingerprint}",
+            )
+            if near is not None:
+                best = self.journal.best_state(near)
+                parsed = parse_workload_key(near)
+                if best is not None and parsed is not None:
+                    m2, k2, n2 = parsed[0], parsed[1], parsed[2]
+                    d = (
+                        abs(math.log2(m2 / wl.m))
+                        + abs(math.log2(k2 / wl.k))
+                        + abs(math.log2(n2 / wl.n))
+                    )
+                    donors.append((d, near, best[0]))
+        for d, _key, src in sorted(donors, key=lambda t: (t[0], t[1])):
+            s = space.transplant(src)
+            if s is not None:
+                return s
+        return None
+
+    # -- single workload -----------------------------------------------------
     def tune_workload(
         self,
         wl: GemmWorkload,
@@ -62,30 +171,137 @@ class TuningSession:
         budget: Optional[Budget] = None,
         tuner_kwargs: Optional[dict] = None,
         seed: Optional[int] = None,
+        n_workers: int = 1,
+        warm_start: bool = False,
+        engine: Optional[MeasureEngine] = None,
+        stats: Optional[MeasureStats] = None,
     ) -> TuneResult:
         space = wl.space()
         cost = self.cost_factory(space)
+        wkey = wl.key(cost.name)
+        if engine is None:
+            engine = MeasureEngine(
+                cost,
+                n_workers=n_workers,
+                journal=self.journal,
+                workload_key=wkey,
+                stats=stats,
+            )
         budget = budget or Budget(max_fraction=0.001)
         tuner_cls = TUNERS[tuner_name]
+        kwargs = dict(tuner_kwargs or {})
+        if warm_start and "s0" not in kwargs:
+            s0 = self.warm_start_state(
+                wl, space, cost.name, fingerprint=cost.measure_fingerprint()
+            )
+            if s0 is not None and "s0" in inspect.signature(
+                tuner_cls.__init__
+            ).parameters:
+                kwargs["s0"] = s0
         tuner = tuner_cls(space, cost, seed=self.seed if seed is None else seed,
-                          **(tuner_kwargs or {}))
-        result = tuner.tune(budget)
+                          **kwargs)
+        result = tuner.tune(budget, engine=engine)
         if result.best_state is not None and math.isfinite(result.best_cost):
             self.records.update(
-                wl.key(cost.name),
+                wkey,
                 result.best_state,
                 result.best_cost,
                 tuner_name,
                 result.n_trials,
-                extra={"label": wl.label},
+                extra={"label": wl.label, "n_workers": engine.n_workers},
             )
         if self.verbose:
             print(
-                f"[tune] {wl.label or wl.key(cost.name)} {tuner_name}: "
+                f"[tune] {wl.label or wkey} {tuner_name}: "
                 f"best={result.best_cost:.3e}s trials={result.n_trials} "
-                f"frac={result.fraction:.5f} wall={result.wall_s:.1f}s"
+                f"frac={result.fraction:.5f} wall={result.wall_s:.1f}s "
+                f"clock={result.clock_s:.1f}s workers={result.n_workers} "
+                f"cache_hit={result.cache_hit_rate:.2f}"
             )
         return result
+
+    # -- whole architecture --------------------------------------------------
+    def tune_arch(
+        self,
+        arch: Optional[str] = None,
+        shape: str = "train_4k",
+        tuner_name: str = "g-bfs",
+        budget: Optional[Budget] = None,
+        n_workers: int = 1,
+        warm_start: bool = False,
+        workloads: Optional[Sequence[GemmWorkload]] = None,
+        tuner_kwargs: Optional[dict] = None,
+    ) -> ArchTuneReport:
+        """Tune every distinct GEMM an architecture executes through one
+        shared engine configuration and one shared budget pool.
+
+        ``budget.max_trials`` / ``max_time_s`` are treated as the TOTAL
+        across the arch: each remaining workload is allocated an equal
+        share of whatever is left (``max_fraction`` stays per-workload,
+        being space-relative).  Workloads with identical ``(m, k, n,
+        dtype)`` are tuned once and share the result; all engines share
+        the session journal and one :class:`MeasureStats`, so the report
+        can attribute the arch-level speedup to lanes vs cache.
+        """
+        if workloads is None:
+            if arch is None:
+                raise ValueError("tune_arch needs an arch name or explicit workloads")
+            from repro.launch.tune import workloads_for_arch  # lazy: avoids cycle
+
+            workloads = workloads_for_arch(arch, shape)
+        budget = budget or Budget(max_fraction=0.001)
+        stats = MeasureStats()
+        unique: dict[tuple, GemmWorkload] = {}
+        labels: dict[tuple, list[str]] = {}
+        for i, wl in enumerate(workloads):
+            shape_key = (wl.m, wl.k, wl.n, wl.dtype, wl.d_m, wl.d_k, wl.d_n)
+            unique.setdefault(shape_key, wl)
+            labels.setdefault(shape_key, []).append(wl.label or f"wl{i}")
+        results: dict[str, TuneResult] = {}
+        left_trials = budget.max_trials
+        left_time = budget.max_time_s
+        n_left = len(unique)
+        for shape_key, wl in unique.items():
+            if (left_trials is not None and left_trials <= 0) or (
+                left_time is not None and left_time <= 0.0
+            ):
+                break  # shared pool exhausted
+            alloc = Budget(
+                max_trials=None if left_trials is None else max(1, left_trials // n_left),
+                max_time_s=None if left_time is None else left_time / n_left,
+                max_fraction=budget.max_fraction,
+            )
+            res = self.tune_workload(
+                wl,
+                tuner_name,
+                alloc,
+                tuner_kwargs,
+                n_workers=n_workers,
+                warm_start=warm_start,
+                stats=stats,
+            )
+            if left_trials is not None:
+                left_trials -= res.n_trials
+            if left_time is not None:
+                left_time -= res.clock_s
+            n_left -= 1
+            for lbl in labels[shape_key]:
+                results[lbl] = res
+        report = ArchTuneReport(
+            results=results,
+            stats=stats,
+            n_workers=max(1, n_workers),
+            n_unique_shapes=len(unique),
+        )
+        if self.verbose:
+            print(
+                f"[tune-arch] {len(results)} workloads / "
+                f"{report.n_unique_shapes} distinct shapes: "
+                f"trials={report.total_trials} clock={report.total_clock_s:.1f}s "
+                f"workers={report.n_workers} "
+                f"cache_hit={stats.cache_hit_rate():.2f}"
+            )
+        return report
 
     def compare(
         self,
@@ -94,6 +310,7 @@ class TuningSession:
         budget: Budget,
         n_seeds: int = 1,
         tuner_kwargs: Optional[dict[str, dict]] = None,
+        n_workers: int = 1,
     ) -> dict[str, list[TuneResult]]:
         """Paper-style head-to-head under an identical budget."""
         out: dict[str, list[TuneResult]] = {}
@@ -102,6 +319,9 @@ class TuningSession:
             for s in range(n_seeds):
                 kw = (tuner_kwargs or {}).get(name, {})
                 out[name].append(
-                    self.tune_workload(wl, name, budget, tuner_kwargs=kw, seed=self.seed + s)
+                    self.tune_workload(
+                        wl, name, budget, tuner_kwargs=kw, seed=self.seed + s,
+                        n_workers=n_workers,
+                    )
                 )
         return out

@@ -1,9 +1,30 @@
-"""Tuner protocol + shared bookkeeping (budgets, history, dedup).
+"""Tuner protocol + shared bookkeeping under the batched measurement
+engine (budgets, dedup, incumbent, the simulated search clock).
 
 Every tuner (the paper's G-BFS and N-A2C, and the baselines it compares
-against) runs through the same :class:`TuningContext` so that
-"fraction of configuration space explored" and "search time" are counted
-identically across methods — which is what the paper's Figs. 7–8 plot.
+against) runs through the same :class:`TuningContext` so that "fraction
+of configuration space explored" and "search time" are counted
+identically across methods — what the paper's Figs. 7–8 plot.
+
+The measurement contract is **batch-first**: tuners propose candidate
+*batches* per round and call :meth:`TuningContext.measure_many`, which
+
+  1. dedups against the visited table (repeat states are free),
+  2. slices the fresh states into waves of ``n_workers`` and hands each
+     wave to the :class:`~repro.core.measure.MeasureEngine` (which may
+     serve states from a persistent cross-session trial cache),
+  3. charges one trial per fresh state against the budget — capping the
+     final wave so a parallel engine can never overshoot ``max_trials``
+     — and advances the search clock by each wave's *critical path*
+     (max lane time), not the lane sum,
+  4. tracks the incumbent and raises :class:`BudgetExhausted` to unwind
+     the tuner when the budget is spent.
+
+With ``n_workers=1`` every wave is a single state measured via the
+backend's scalar path, so the visited-state sequence, trial order, and
+clock are bit-identical to the historical serial ``measure()`` loop —
+Fig. 7/8 reproductions do not shift.  ``measure()`` survives as the
+single-state convenience wrapper.
 """
 
 from __future__ import annotations
@@ -13,10 +34,11 @@ import dataclasses
 import math
 import random
 import time
-from typing import Optional
+from typing import Optional, Sequence
 
 from ..config_space import GemmConfigSpace, TilingState
 from ..cost.base import CostBackend
+from ..measure import MeasureEngine
 
 __all__ = ["Budget", "Trial", "TuneResult", "TuningContext", "Tuner", "BudgetExhausted"]
 
@@ -54,6 +76,12 @@ class TuneResult:
     fraction: float
     wall_s: float
     clock_s: float
+    n_workers: int = 1
+    n_cache_hits: int = 0  # trials served from the persistent journal
+
+    @property
+    def cache_hit_rate(self) -> float:
+        return self.n_cache_hits / max(1, self.n_trials)
 
     def best_curve(self) -> list[tuple[int, float]]:
         """(n_trials, best_cost_so_far) — the paper's Fig. 7a series."""
@@ -77,16 +105,19 @@ class BudgetExhausted(Exception):
 
 
 class TuningContext:
-    """Measurement broker: dedups states, charges the budget, tracks the
-    incumbent.  Raising :class:`BudgetExhausted` unwinds the tuner."""
+    """Search-side measurement broker: dedups states, charges the budget,
+    tracks the incumbent, and drives the engine's measurement waves.
+    Raising :class:`BudgetExhausted` unwinds the tuner."""
 
     def __init__(
         self,
         space: GemmConfigSpace,
         cost: CostBackend,
         budget: Budget,
-        overhead_s: float = 0.35,
-        measure_timeout_s: float = 4.0,
+        overhead_s: Optional[float] = None,
+        measure_timeout_s: Optional[float] = None,
+        n_workers: Optional[int] = None,
+        engine: Optional[MeasureEngine] = None,
     ):
         self.space = space
         self.cost_backend = cost
@@ -97,12 +128,41 @@ class TuningContext:
         self.best_state: Optional[TilingState] = None
         self.best_cost = math.inf
         self.clock_s = 0.0
-        self.overhead_s = overhead_s  # per-measurement codegen/launch charge
+        if engine is None:
+            engine = MeasureEngine(
+                cost,
+                n_workers=1 if n_workers is None else n_workers,
+                overhead_s=0.35 if overhead_s is None else overhead_s,
+                timeout_s=4.0 if measure_timeout_s is None else measure_timeout_s,
+            )
+        else:
+            # the engine owns the measurement model: reject conflicting
+            # explicit arguments instead of silently dropping them
+            for arg, val in (
+                ("overhead_s", overhead_s),
+                ("measure_timeout_s", measure_timeout_s),
+            ):
+                got = engine.overhead_s if arg == "overhead_s" else engine.timeout_s
+                if val is not None and val != got:
+                    raise ValueError(
+                        f"{arg}={val} conflicts with the provided engine's {got}"
+                    )
+            if n_workers is not None and n_workers != engine.n_workers:
+                raise ValueError(
+                    f"n_workers={n_workers} conflicts with the provided "
+                    f"engine's {engine.n_workers}"
+                )
+        self.engine = engine
+        self.n_workers = engine.n_workers
+        self.overhead_s = engine.overhead_s  # per-measurement codegen/launch charge
         # AutoTVM-style measurement timeout: a pathological config (the
         # untiled s0 runs for minutes under the model) charges at most
         # this much search clock — without it, time-budget comparisons
         # degenerate for tuners that start at s0
-        self.measure_timeout_s = measure_timeout_s
+        self.measure_timeout_s = engine.timeout_s
+        # engine stats may be shared across contexts (tune_arch): snapshot
+        # so result() reports this search's deltas only
+        self._stats0 = (engine.stats.n_dispatched, engine.stats.n_cache_hits)
         self.wall_start = time.monotonic()
 
     # -- paper bookkeeping ---------------------------------------------------
@@ -116,24 +176,45 @@ class TuningContext:
             return True
         return False
 
+    def measure_many(self, states: Sequence[TilingState]) -> list[float]:
+        """Measure a candidate batch; returns costs aligned with ``states``.
+
+        Already-visited states (and intra-batch duplicates) are served
+        from the visited table without charging the budget.  Fresh states
+        are measured in proposal order, ``n_workers`` at a time; each
+        *new* state charges one trial and each wave charges its critical
+        path on the clock.  Raises :class:`BudgetExhausted` when the
+        budget runs out mid-batch (the already-measured prefix is kept).
+        """
+        fresh: list[TilingState] = []
+        fresh_keys: set[str] = set()
+        for s in states:
+            key = s.key()
+            if key not in self.visited and key not in fresh_keys:
+                fresh.append(s)
+                fresh_keys.add(key)
+        i = 0
+        while i < len(fresh):
+            if self.done():
+                raise BudgetExhausted()
+            room = self.max_trials - len(self.trials)
+            wave = fresh[i : i + min(self.n_workers, room)]
+            outcomes = self.engine.measure_wave(wave)
+            self.clock_s += max(o.lane_s for o in outcomes)
+            for o in outcomes:
+                self.visited[o.state.key()] = o.cost
+                self.trials.append(Trial(o.state, o.cost, len(self.trials), self.clock_s))
+                if o.cost < self.best_cost:
+                    self.best_cost, self.best_state = o.cost, o.state
+            i += len(wave)
+        return [self.visited[s.key()] for s in states]
+
     def measure(self, s: TilingState) -> float:
-        """cost(s) with dedup; each *new* state charges one trial."""
-        key = s.key()
-        if key in self.visited:
-            return self.visited[key]
-        if self.done():
-            raise BudgetExhausted()
-        c = self.cost_backend.cost(s)
-        self.clock_s += self.overhead_s + (
-            0.0 if math.isinf(c) else min(c, self.measure_timeout_s)
-        )
-        self.visited[key] = c
-        self.trials.append(Trial(s, c, len(self.trials), self.clock_s))
-        if c < self.best_cost:
-            self.best_cost, self.best_state = c, s
-        return c
+        """Single-state convenience wrapper over :meth:`measure_many`."""
+        return self.measure_many([s])[0]
 
     def result(self, tuner_name: str) -> TuneResult:
+        d0, h0 = self._stats0
         return TuneResult(
             tuner=tuner_name,
             best_state=self.best_state,
@@ -143,6 +224,8 @@ class TuningContext:
             fraction=len(self.trials) / max(1, self.space.size()),
             wall_s=time.monotonic() - self.wall_start,
             clock_s=self.clock_s,
+            n_workers=self.n_workers,
+            n_cache_hits=self.engine.stats.n_cache_hits - h0,
         )
 
 
@@ -159,8 +242,21 @@ class Tuner(abc.ABC):
     def run(self, ctx: TuningContext) -> None:
         """Search until ctx.done() or BudgetExhausted."""
 
-    def tune(self, budget: Budget, overhead_s: float = 0.35) -> TuneResult:
-        ctx = TuningContext(self.space, self.cost, budget, overhead_s=overhead_s)
+    def tune(
+        self,
+        budget: Budget,
+        overhead_s: Optional[float] = None,  # defaults to 0.35 without an engine
+        n_workers: Optional[int] = None,  # defaults to 1 without an engine
+        engine: Optional[MeasureEngine] = None,
+    ) -> TuneResult:
+        ctx = TuningContext(
+            self.space,
+            self.cost,
+            budget,
+            overhead_s=overhead_s,
+            n_workers=n_workers,
+            engine=engine,
+        )
         try:
             self.run(ctx)
         except BudgetExhausted:

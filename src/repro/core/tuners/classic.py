@@ -4,10 +4,20 @@ Random/grid/GA are the baselines the TVM papers (Chen et al. 2018a/b)
 compare XGBoost against; the paper inherits those comparisons.  Simulated
 annealing is included as an extra neighborhood-aware control (beyond
 paper) since it uses the same MDP moves as G-BFS but no frontier memory.
+
+All four propose candidate *batches* per round through
+``TuningContext.measure_many`` so the measurement engine can spread each
+round across its ``n_workers`` lanes: random and grid propose lane-sized
+waves, the GA measures its seed population and each generation's
+children as one batch, and annealing runs ``n_workers`` independent
+Metropolis chains whose per-round proposals are measured together.  With
+``n_workers=1`` each of them degenerates to the historical serial loop
+(identical RNG consumption, identical trial order).
 """
 
 from __future__ import annotations
 
+import itertools
 import math
 
 from ..config_space import TilingState
@@ -21,24 +31,42 @@ class RandomTuner(Tuner):
 
     def run(self, ctx: TuningContext) -> None:
         while not ctx.done():
-            s = self.space.random_state(self.rng)
-            if not ctx.seen(s):
-                ctx.measure(s)
+            wave: list[TilingState] = []
+            keys: set[str] = set()
+            attempts = 0
+            want = max(1, ctx.n_workers)
+            while len(wave) < want and attempts < 64 * want:
+                attempts += 1
+                s = self.space.random_state(self.rng)
+                if not ctx.seen(s) and s.key() not in keys:
+                    wave.append(s)
+                    keys.add(s.key())
+            if not wave:
+                return  # space (effectively) exhausted
+            ctx.measure_many(wave)
 
 
 class GridTuner(Tuner):
-    """Sequential sweep in enumeration order (paper Sec. 2: grid search)."""
+    """Sequential sweep in enumeration order (paper Sec. 2: grid search),
+    chunked into lane-sized waves."""
 
     name = "grid"
 
     def run(self, ctx: TuningContext) -> None:
-        for s in self.space.enumerate():
-            if ctx.done():
+        it = self.space.enumerate()
+        while not ctx.done():
+            chunk = list(itertools.islice(it, max(1, ctx.n_workers)))
+            if not chunk:
                 return
-            ctx.measure(s)
+            ctx.measure_many(chunk)
 
 
 class AnnealingTuner(Tuner):
+    """Metropolis chains over the MDP neighborhood.  One chain per engine
+    lane; each round every chain advances to its next *unvisited*
+    proposal (cached states are folded in for free along the way) and the
+    proposals are measured as one wave."""
+
     name = "sim-anneal"
 
     def __init__(self, space, cost, seed: int = 0, t0: float = 1.0,
@@ -46,19 +74,23 @@ class AnnealingTuner(Tuner):
         super().__init__(space, cost, seed)
         self.t0, self.decay, self.restarts = t0, decay, restarts
 
-    def run(self, ctx: TuningContext) -> None:
-        r = 0
+    def _chain(self, ctx: TuningContext, first: bool):
+        """Generator form of one annealing chain: yields states that need
+        a measurement and receives their cost via ``send`` — cached
+        states are consumed inline without occupying a lane.  The body is
+        statement-for-statement the historical serial loop, so a single
+        chain reproduces it exactly."""
         while not ctx.done():  # keep restarting until the budget is spent
-            s = self.space.initial_state() if r == 0 else self.space.random_state(self.rng)
-            r += 1
-            c = ctx.measure(s) if not ctx.seen(s) else ctx.visited[s.key()]
+            s = self.space.initial_state() if first else self.space.random_state(self.rng)
+            first = False
+            c = (yield s) if not ctx.seen(s) else ctx.visited[s.key()]
             temp = self.t0
             while not ctx.done():
                 neigh = self.space.neighbors(s)
                 if not neigh:
                     break
                 s2 = self.rng.choice(neigh)
-                c2 = ctx.measure(s2) if not ctx.seen(s2) else ctx.visited[s2.key()]
+                c2 = (yield s2) if not ctx.seen(s2) else ctx.visited[s2.key()]
                 if not math.isfinite(c2):
                     temp *= self.decay
                     continue
@@ -68,6 +100,28 @@ class AnnealingTuner(Tuner):
                 temp *= self.decay
                 if temp < 1e-3:
                     break
+
+    def run(self, ctx: TuningContext) -> None:
+        chains = [
+            self._chain(ctx, first=(i == 0)) for i in range(max(1, ctx.n_workers))
+        ]
+        requests: list[tuple] = []
+        for ch in chains:
+            try:
+                requests.append((ch, next(ch)))
+            except StopIteration:
+                pass
+        while requests:
+            batch = [s for _, s in requests]
+            costs = ctx.measure_many(batch)  # raises BudgetExhausted at the limit
+            cost_of = {s.key(): c for s, c in zip(batch, costs)}
+            nxt = []
+            for ch, s in requests:
+                try:
+                    nxt.append((ch, ch.send(cost_of[s.key()])))
+                except StopIteration:
+                    pass
+            requests = nxt
 
 
 class GeneticTuner(Tuner):
@@ -90,14 +144,25 @@ class GeneticTuner(Tuner):
         neigh = self.space.neighbors(s)
         return self.rng.choice(neigh) if neigh else s
 
+    def _measure_fresh(self, ctx: TuningContext,
+                       cands: list[TilingState]) -> list[tuple[float, TilingState]]:
+        """Batch-measure the unvisited, intra-batch-unique candidates."""
+        fresh: list[TilingState] = []
+        keys: set[str] = set()
+        for s in cands:
+            if not ctx.seen(s) and s.key() not in keys:
+                fresh.append(s)
+                keys.add(s.key())
+        if not fresh:
+            return []
+        costs = ctx.measure_many(fresh)
+        return list(zip(costs, fresh))
+
     def run(self, ctx: TuningContext) -> None:
-        pop: list[tuple[float, TilingState]] = []
         seeds = [self.space.initial_state()] + [
             self.space.random_state(self.rng) for _ in range(self.pop_size - 1)
         ]
-        for s in seeds:
-            if not ctx.seen(s):
-                pop.append((ctx.measure(s), s))
+        pop = self._measure_fresh(ctx, seeds)
         while not ctx.done():
             pop.sort(key=lambda t: t[0])
             elites = pop[: self.elite]
@@ -113,12 +178,9 @@ class GeneticTuner(Tuner):
                 if self.space.is_legitimate(ch) and not ctx.seen(ch):
                     children.append(ch)
             nxt = list(elites)
-            measured = 0
-            for ch in children:
-                if not ctx.seen(ch):
-                    nxt.append((ctx.measure(ch), ch))
-                    measured += 1
-            if measured == 0:  # converged population: inject fresh genes
+            measured = self._measure_fresh(ctx, children)
+            nxt.extend(measured)
+            if not measured:  # converged population: inject fresh genes
                 for _ in range(self.pop_size):
                     s = self.space.random_state(self.rng)
                     if not ctx.seen(s):

@@ -2,9 +2,13 @@
 
 A priority queue ordered by measured cost holds the frontier.  Each
 iteration pops the cheapest state, samples ``rho`` of its legitimate
-unvisited neighbors (Eqn. 9), measures them, and pushes them back.  With
-``rho = len(g(s))`` and unlimited budget the search visits the entire
-reachable space (paper Sec. 4.2).
+unvisited neighbors (Eqn. 9), measures the whole ρ-sample in **one
+engine call** (`measure_many`), and pushes the results back.  With
+``n_workers >= rho`` the entire sample is measured as one concurrent
+wave, so each round costs one critical-path measurement on the search
+clock instead of ρ sequential ones.  With ``rho = len(g(s))`` and
+unlimited budget the search visits the entire reachable space (paper
+Sec. 4.2).
 """
 
 from __future__ import annotations
@@ -40,6 +44,7 @@ class GBFSTuner(Tuner):
                 continue
             rho = min(self.rho, len(neigh))
             batch = self.rng.sample(neigh, rho)
-            for s2 in batch:
-                c2 = ctx.measure(s2)  # raises BudgetExhausted at the limit
+            # one engine round per ρ-sample; raises BudgetExhausted at the limit
+            costs = ctx.measure_many(batch)
+            for s2, c2 in zip(batch, costs):
                 heapq.heappush(pq, (c2, next(tie), s2))

@@ -10,7 +10,12 @@ residuals with shrinkage — is implemented from scratch in numpy
   2. fit the surrogate on log-costs of everything measured,
   3. propose candidates (random pool + neighbors of incumbents),
      rank by predicted cost, ε-diversify,
-  4. measure the top batch, go to 2.
+  4. measure the top batch in one batched engine call, go to 2.
+
+Both the warmup and the per-round top batch go through
+``TuningContext.measure_many`` so the engine can spread each batch
+across its ``n_workers`` measurement lanes (AutoTVM measures its
+proposal batches on parallel device workers the same way).
 """
 
 from __future__ import annotations
@@ -153,12 +158,22 @@ class GBTTuner(Tuner):
         return [s for k, s in pool.items() if k not in ctx.visited]
 
     def run(self, ctx: TuningContext) -> None:
-        # 1. warmup
+        # 1. warmup — random states proposed in lane-sized waves
         ctx.measure(self.space.initial_state())
         while len(ctx.trials) < self.warmup and not ctx.done():
-            s = self.space.random_state(self.rng)
-            if not ctx.seen(s):
-                ctx.measure(s)
+            want = min(max(1, ctx.n_workers), self.warmup - len(ctx.trials))
+            wave: list[TilingState] = []
+            keys: set[str] = set()
+            attempts = 0
+            while len(wave) < want and attempts < 64 * want:
+                attempts += 1
+                s = self.space.random_state(self.rng)
+                if not ctx.seen(s) and s.key() not in keys:
+                    wave.append(s)
+                    keys.add(s.key())
+            if not wave:
+                break
+            ctx.measure_many(wave)
         model = GradientBoostedTrees(self.n_trees, self.depth)
         it = 0
         while not ctx.done():
@@ -189,7 +204,12 @@ class GBTTuner(Tuner):
                 batch[self.rng.randrange(len(batch))] = pool[
                     int(order[self.rng.randrange(len(order))])
                 ]
-            # 4. measure
+            # 4. measure the surviving batch in one engine round
+            fresh: list[TilingState] = []
+            keys = set()
             for s in batch:
-                if not ctx.seen(s):
-                    ctx.measure(s)
+                if not ctx.seen(s) and s.key() not in keys:
+                    fresh.append(s)
+                    keys.add(s.key())
+            if fresh:
+                ctx.measure_many(fresh)

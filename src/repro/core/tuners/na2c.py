@@ -3,11 +3,16 @@ Fig. 6).
 
 Per episode the agent rolls out ``T`` steps from the neighborhood center
 (the best state ever visited), collecting *unvisited* states into a
-candidate batch; when the batch is full, all candidates are measured on
-the cost backend, the replay memory is updated with transitions and
-rewards ``r = 1/cost(s')`` (Eqn. 8), and the actor/critic networks are
-trained from replay.  The center re-anchors to the incumbent (line 22 of
-Algorithm 2).
+candidate batch; when the batch is full, all candidates are measured in
+**one batched engine call** (``measure_many`` — with ``n_workers`` lanes
+the whole episode batch costs one wave of search clock, the refactor the
+TVM line of work uses to win wall-clock), the replay memory is updated
+with transitions and rewards ``r = 1/cost(s')`` (Eqn. 8), and the
+actor/critic networks are trained from replay.  Rollout bookkeeping is
+vectorized where it does not perturb the sampling sequence: action masks
+are memoized per episode (each is 26 ``space.step`` probes) and replay
+features are stacked once per round.  The center re-anchors to the
+incumbent (line 22 of Algorithm 2).
 
 Faithfulness notes:
   * The paper's ε-greedy is stated as "with probability ε follow π,
@@ -149,14 +154,26 @@ class NA2CTuner(Tuner):
             frac = len(ctx.trials) / max(1, ctx.max_trials)
             eps = self.eps0 + (self.eps1 - self.eps0) * frac
             collected: list[TilingState] = []
+            collected_keys: set[str] = set()
             transitions: list[tuple[TilingState, int, TilingState]] = []
+            # per-episode mask memo: each mask is 26 space.step probes and
+            # rollouts + replay revisit the same states repeatedly
+            masks: dict[str, np.ndarray] = {}
+
+            def mask_of(s: TilingState) -> np.ndarray:
+                m = masks.get(s.key())
+                if m is None:
+                    m = self._action_mask(s)
+                    masks[s.key()] = m
+                return m
+
             # -- collect candidates by T-step rollouts around the center ------
             guard = 0
             while len(collected) < self.batch_size and guard < 50:
                 guard += 1
                 s = center
                 for _ in range(max(1, T)):
-                    mask = self._action_mask(s)
+                    mask = mask_of(s)
                     if not mask.any():
                         break
                     if self.rng.random() < eps:
@@ -168,10 +185,9 @@ class NA2CTuner(Tuner):
                     s2 = self.space.step(s, self.space.actions[a_idx])
                     assert s2 is not None
                     transitions.append((s, a_idx, s2))
-                    if not ctx.seen(s2) and all(
-                        s2.key() != c.key() for c in collected
-                    ):
+                    if not ctx.seen(s2) and s2.key() not in collected_keys:
                         collected.append(s2)
+                        collected_keys.add(s2.key())
                     s = s2
             if not collected:
                 # neighborhood exhausted: hop the center to a random state
@@ -179,9 +195,8 @@ class NA2CTuner(Tuner):
                 if not ctx.seen(center):
                     ctx.measure(center)
                 continue
-            # -- measure the batch on "hardware" --------------------------------
-            for s2 in collected:
-                ctx.measure(s2)  # may raise BudgetExhausted — fine (line 4)
+            # -- measure the batch on "hardware": one engine round ---------------
+            ctx.measure_many(collected)  # may raise BudgetExhausted — fine (line 4)
             # -- replay update: rewards from the visited-cost table -------------
             for (s, a_idx, s2) in transitions:
                 c2 = ctx.visited.get(s2.key())
@@ -194,8 +209,8 @@ class NA2CTuner(Tuner):
                         a_idx,
                         r,
                         self.space.features(s2),
-                        self._action_mask(s),
-                        self._action_mask(s2),
+                        mask_of(s),
+                        mask_of(s2),
                     )
                 )
             # -- re-anchor the neighborhood center (Algorithm 2 line 22) --------

@@ -165,6 +165,11 @@ class RNNControllerTuner(Tuner):
 
     # -- REINFORCE loop ------------------------------------------------------------
     def run(self, ctx: TuningContext) -> None:
+        # Controller samples are drawn first, then the whole batch is
+        # measured in ONE engine call — the controller's parameters only
+        # update between batches, so deferring measurement changes
+        # nothing about the sampling distribution while letting the
+        # engine spread the batch across its measurement lanes.
         if not self._ready:
             self._setup()
         np_ = np
@@ -173,20 +178,25 @@ class RNNControllerTuner(Tuner):
             c_ref = 1.0
         baseline = None
         while not ctx.done():
-            batch = []
+            sampled = []  # (state, choices, masks) pending measurement
+            round_keys: set[str] = set()
             guard = 0
-            while len(batch) < self.batch_size and guard < 64:
+            while len(sampled) < self.batch_size and guard < 64:
                 guard += 1
                 s, choices, masks = self._sample_config()
                 if not self.space.is_legitimate(s):
                     continue
-                fresh = not ctx.seen(s)
-                c = ctx.measure(s) if fresh else ctx.visited[s.key()]
-                if fresh:
-                    r = 0.0 if not math.isfinite(c) else float(c_ref / c)
-                    batch.append((choices, masks, r))
-            if not batch:
+                if ctx.seen(s) or s.key() in round_keys:
+                    continue
+                round_keys.add(s.key())
+                sampled.append((s, choices, masks))
+            if not sampled:
                 continue
+            costs = ctx.measure_many([s for s, _, _ in sampled])
+            batch = [
+                (choices, masks, 0.0 if not math.isfinite(c) else float(c_ref / c))
+                for (_, choices, masks), c in zip(sampled, costs)
+            ]
             rewards = np_.asarray([b[2] for b in batch], np_.float32)
             if baseline is None:
                 baseline = float(rewards.mean())

@@ -25,6 +25,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax >= 0.5 renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 __all__ = ["flash_attention"]
 
 
@@ -122,7 +125,7 @@ def flash_attention(
             pltpu.VMEM((g, block_q), jnp.float32),
             pltpu.VMEM((g, block_q), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel"),
         ),
         interpret=interpret,

@@ -3,12 +3,20 @@ as a first-class framework feature.
 
 Extracts every distinct GEMM workload the arch executes at the given
 shape (qkv / attn-out / ffn / experts / lm-head, see
-ArchConfig.gemm_workloads), tunes each with the selected method, and
-writes the best configs to a TuningRecords JSON that
-``kernels/ops.py::gemm`` consults at trace time.
+ArchConfig.gemm_workloads), fans them through one shared measurement
+engine + budget (``TuningSession.tune_arch``), and writes the best
+configs to a TuningRecords JSON that ``kernels/ops.py::gemm`` consults
+at trace time.
 
   python -m repro.launch.tune --arch yi-6b --shape train_4k \
-      --tuner g-bfs --fraction 0.001 --records records/yi-6b.json
+      --tuner g-bfs --fraction 0.001 --records records/yi-6b.json \
+      --workers 8 --warm-start
+
+``--workers N`` measures candidate batches on N parallel engine lanes;
+``--warm-start`` seeds each search from this workload's previous best
+record (or the nearest previously-tuned shape, transplanted).  Every
+measurement is journaled next to the records file, so re-runs and
+overlapping shapes are served from cache.
 """
 
 from __future__ import annotations
@@ -16,7 +24,7 @@ from __future__ import annotations
 import argparse
 
 from repro.configs.registry import get_arch, get_shape
-from repro.core import Budget, GemmWorkload, TuningRecords, TuningSession
+from repro.core import Budget, GemmWorkload, TrialJournal, TuningRecords, TuningSession
 from repro.core.cost import AnalyticalTPUCost
 
 
@@ -57,13 +65,28 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", default="train_4k")
-    ap.add_argument("--tuner", default="g-bfs")
+    from repro.core.tuners import TUNERS
+
+    ap.add_argument("--tuner", default="g-bfs", choices=sorted(TUNERS))
     ap.add_argument("--fraction", type=float, default=0.001)
-    ap.add_argument("--max-trials", type=int, default=None)
+    ap.add_argument("--max-trials", type=int, default=None,
+                    help="TOTAL trial pool shared across the arch's workloads")
     ap.add_argument("--records", default="records/tuning.json")
     ap.add_argument("--noise", type=float, default=0.05)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--workers", type=int, default=1,
+                    help="parallel measurement lanes per engine")
+    ap.add_argument("--warm-start", action="store_true",
+                    help="seed each search from the nearest tuned shape")
+    ap.add_argument("--journal", default=None,
+                    help="trial-journal path (default: <records>.journal.jsonl; "
+                         "'none' disables the persistent cache)")
     args = ap.parse_args()
+
+    journal_path = args.journal
+    if journal_path is None:
+        journal_path = args.records + ".journal.jsonl"
+    journal = None if journal_path == "none" else TrialJournal(journal_path)
 
     records = TuningRecords(args.records)
     session = TuningSession(
@@ -72,11 +95,21 @@ def main() -> None:
             space, n_repeats=3, noise_sigma=args.noise, seed=args.seed
         ),
         seed=args.seed,
+        journal=journal,
     )
     budget = Budget(max_fraction=args.fraction, max_trials=args.max_trials)
-    for wl in workloads_for_arch(args.arch, args.shape):
-        session.tune_workload(wl, args.tuner, budget)
-    print(f"[tune] wrote {len(records)} records to {args.records}")
+    report = session.tune_arch(
+        workloads=workloads_for_arch(args.arch, args.shape),
+        tuner_name=args.tuner,
+        budget=budget,
+        n_workers=args.workers,
+        warm_start=args.warm_start,
+    )
+    print(
+        f"[tune] wrote {len(records)} records to {args.records} "
+        f"(workers={report.n_workers} "
+        f"cache_hit={report.stats.cache_hit_rate():.2f})"
+    )
 
 
 if __name__ == "__main__":

@@ -1,0 +1,72 @@
+"""Property-based MDP invariants (hypothesis).  Guarded with
+``pytest.importorskip`` so environments without hypothesis skip cleanly
+instead of erroring at collection (deterministic variants of the same
+invariants live in ``test_config_space.py``)."""
+
+import math
+
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import GemmConfigSpace
+
+
+@st.composite
+def space_and_state(draw):
+    em = draw(st.integers(2, 6))
+    ek = draw(st.integers(2, 6))
+    en = draw(st.integers(2, 6))
+    space = GemmConfigSpace(2**em, 2**ek, 2**en)
+    import random
+
+    rng = random.Random(draw(st.integers(0, 10_000)))
+    state = space.random_state(rng)
+    return space, state
+
+
+@given(space_and_state())
+@settings(max_examples=60, deadline=None)
+def test_actions_preserve_products(pair):
+    """Eqn. 6 moves keep every dimension's product exact (the core
+    legitimacy invariant)."""
+    space, s = pair
+    dims = s.dims()
+    for a in space.actions:
+        s2 = space.step(s, a)
+        if s2 is not None:
+            assert s2.dims() == dims
+            assert space.is_legitimate(s2)
+
+
+@given(space_and_state())
+@settings(max_examples=60, deadline=None)
+def test_neighbor_symmetry(pair):
+    """Every move has an inverse: s' in g(s) implies s in g(s')."""
+    space, s = pair
+    for s2 in space.neighbors(s):
+        back_keys = {b.key() for b in space.neighbors(s2)}
+        assert s.key() in back_keys
+
+
+@given(space_and_state())
+@settings(max_examples=60, deadline=None)
+def test_random_state_legitimate_and_features_finite(pair):
+    space, s = pair
+    assert space.is_legitimate(s)
+    f = space.features(s)
+    assert f.shape == (space.n_features,)
+    assert all(map(math.isfinite, f.tolist()))
+
+
+@given(space_and_state())
+@settings(max_examples=40, deadline=None)
+def test_transplant_into_random_space(pair):
+    """Any state transplants into any power-of-two space legitimately."""
+    space, s = pair
+    dst = GemmConfigSpace(128, 256, 512)
+    s2 = dst.transplant(s)
+    assert s2 is not None
+    assert dst.is_legitimate(s2)

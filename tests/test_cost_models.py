@@ -1,9 +1,9 @@
-"""Cost-backend tests: analytical model physics + measured backends."""
+"""Cost-backend tests: analytical model physics, batched measurement
+parity, and measured backends."""
 
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import AnalyticalTPUCost, CountingCost, GemmConfigSpace, TilingState
 from repro.core.cost.measured import PallasInterpretCost, XLATimedCost
@@ -57,6 +57,50 @@ def test_counting_cost_tracks_trials(small_space):
     cc.cost(s)
     assert cc.n_measured == 2
     assert cc.simulated_clock_s > 1.0
+
+
+def test_counting_cost_timeout_cap(small_space):
+    """A pathological config charges at most timeout_s of simulated
+    clock per trial — matching TuningContext.measure_timeout_s."""
+
+    class SlowCost(AnalyticalTPUCost):
+        def cost_once(self, s, repeat_idx):
+            return 1e6  # "runs for minutes"
+
+    cc = CountingCost(SlowCost(small_space), simulated_overhead_s=0.35, timeout_s=4.0)
+    cc.cost(small_space.initial_state())
+    assert cc.simulated_clock_s == pytest.approx(0.35 + 4.0)
+
+
+def test_counting_cost_parallel_lanes(small_space):
+    """batch_cost with n_workers lanes charges each wave's max lane
+    time, so the counting clock agrees with the engine's wave model."""
+    states = list(small_space.enumerate())[:8]
+    serial = CountingCost(AnalyticalTPUCost(small_space), simulated_overhead_s=0.5)
+    lanes = CountingCost(
+        AnalyticalTPUCost(small_space), simulated_overhead_s=0.5, n_workers=4
+    )
+    cs = serial.batch_cost(states)
+    cl = lanes.batch_cost(states)
+    assert cs == cl  # values never change, only time accounting
+    assert lanes.n_measured == serial.n_measured == 8
+    # 8 serial charges vs 2 wave maxima
+    assert lanes.simulated_clock_s < serial.simulated_clock_s
+    assert lanes.simulated_clock_s >= 2 * 0.5
+
+
+def test_analytical_batch_cost_matches_serial(small_space):
+    """batch_cost must be value-identical to the scalar path, noise and
+    repeats included (the engine's parity guarantee rests on this)."""
+    cost = AnalyticalTPUCost(small_space, n_repeats=3, noise_sigma=0.1, seed=11)
+    states = list(small_space.enumerate())[:64]
+    assert cost.batch_cost(states) == [cost.cost(s) for s in states]
+    # vmem failures and illegitimate states round-trip as inf
+    big = GemmConfigSpace(4096, 4096, 4096)
+    cost_big = AnalyticalTPUCost(big)
+    bad = TilingState((1, 1, 1, 4096), (1, 4096), (1, 4096, 1, 1))
+    out = cost_big.batch_cost([bad, big.initial_state()])
+    assert math.isinf(out[0]) and math.isfinite(out[1])
 
 
 def test_brute_force_optimum_is_minimum(small_space):

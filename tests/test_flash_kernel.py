@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 
 import jax.numpy as jnp
+pytest.importorskip("hypothesis")  # optional dev dep; skip, don't error
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.flash_attention import flash_attention

@@ -6,6 +6,7 @@ import pytest
 
 import jax
 import jax.numpy as jnp
+pytest.importorskip("hypothesis")  # optional dev dep; skip, don't error
 from hypothesis import given, settings, strategies as st
 
 from repro.core.config_space import GemmConfigSpace, TilingState

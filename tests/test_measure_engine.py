@@ -1,0 +1,254 @@
+"""Batched measurement engine: serial parity, parallel-lane budgets and
+clock compression, the persistent trial journal, warm starts, and
+arch-level fan-out."""
+
+import heapq
+import itertools
+import math
+import random
+
+import pytest
+
+from repro.core import (
+    AnalyticalTPUCost,
+    Budget,
+    GBFSTuner,
+    GemmConfigSpace,
+    GemmWorkload,
+    MeasureEngine,
+    TrialJournal,
+    TuningRecords,
+    TuningSession,
+    workload_key,
+)
+from repro.core.tuners.base import BudgetExhausted, TuningContext
+
+
+def _make_cost(space, seed=3):
+    return AnalyticalTPUCost(space, n_repeats=2, noise_sigma=0.1, seed=seed)
+
+
+def _reference_serial_gbfs(space, cost, seed, budget, rho=5):
+    """The pre-engine serial G-BFS loop, state-for-state: pops the
+    cheapest frontier state and measures its ρ-sample one state at a
+    time through ``ctx.measure``.  The parity oracle for the refactor."""
+    ctx = TuningContext(space, cost, budget)
+    rng = random.Random(seed)
+    try:
+        s0 = space.initial_state()
+        c0 = ctx.measure(s0)
+        tie = itertools.count()
+        pq = [(c0, next(tie), s0)]
+        while pq and not ctx.done():
+            _, _, s = heapq.heappop(pq)
+            neigh = [s2 for s2 in space.neighbors(s) if not ctx.seen(s2)]
+            if not neigh:
+                continue
+            batch = rng.sample(neigh, min(rho, len(neigh)))
+            for s2 in batch:
+                c2 = ctx.measure(s2)
+                heapq.heappush(pq, (c2, next(tie), s2))
+    except BudgetExhausted:
+        pass
+    return ctx.result("serial-reference")
+
+
+@pytest.fixture(scope="module")
+def space():
+    return GemmConfigSpace(256, 256, 256)
+
+
+def test_gbfs_serial_parity(space):
+    """With n_workers=1 the engine-backed GBFSTuner visits the same
+    states, in the same order, at the same costs and clock, as the
+    historical serial loop (acceptance: Fig. 7/8 runs must not shift)."""
+    budget = Budget(max_trials=150)
+    ref = _reference_serial_gbfs(space, _make_cost(space), 7, budget)
+    new = GBFSTuner(space, _make_cost(space), seed=7).tune(budget)
+    assert [t.state.key() for t in ref.trials] == [t.state.key() for t in new.trials]
+    assert [t.cost for t in ref.trials] == [t.cost for t in new.trials]
+    assert [t.clock_s for t in ref.trials] == [t.clock_s for t in new.trials]
+    assert new.best_cost == ref.best_cost
+
+
+def test_gbfs_parallel_same_sequence_never_exceeds_budget(space):
+    """n_workers>1 compresses the clock but must not change the trial
+    sequence (order-preserving waves) nor overshoot max_trials."""
+    budget = Budget(max_trials=150)
+    serial = GBFSTuner(space, _make_cost(space), seed=7).tune(budget)
+    for workers in (4, 8):
+        par = GBFSTuner(space, _make_cost(space), seed=7).tune(budget, n_workers=workers)
+        assert par.n_trials <= 150
+        assert [t.state.key() for t in par.trials] == [
+            t.state.key() for t in serial.trials
+        ]
+        assert par.best_cost == serial.best_cost
+        assert par.clock_s < serial.clock_s
+    par8 = GBFSTuner(space, _make_cost(space), seed=7).tune(budget, n_workers=8)
+    # ρ=5 batches measured as one wave each: ≥4x clock compression
+    assert serial.clock_s / par8.clock_s >= 4.0
+
+
+def test_measure_many_dedup_and_intra_batch_duplicates(space):
+    cost = AnalyticalTPUCost(space)
+    ctx = TuningContext(space, cost, Budget(max_trials=10), n_workers=4)
+    s0 = space.initial_state()
+    s1 = space.neighbors(s0)[0]
+    out = ctx.measure_many([s0, s1, s0, s1])
+    assert len(ctx.trials) == 2  # duplicates served, not re-charged
+    assert out[0] == out[2] and out[1] == out[3]
+    out2 = ctx.measure_many([s1])  # previously visited: free, no trial
+    assert len(ctx.trials) == 2 and out2[0] == out[1]
+
+
+def test_measure_many_raises_when_exhausted(space):
+    cost = AnalyticalTPUCost(space)
+    ctx = TuningContext(space, cost, Budget(max_trials=3), n_workers=2)
+    states = [s for s in itertools.islice(space.enumerate(), 6)]
+    with pytest.raises(BudgetExhausted):
+        ctx.measure_many(states)
+    assert len(ctx.trials) == 3  # the measured prefix is kept
+
+
+def test_journal_serves_repeat_sessions(tmp_path, space):
+    """A second session over the same workload is served from the
+    persistent journal: same result, zero measurement clock."""
+    jpath = str(tmp_path / "trials.jsonl")
+    wkey = workload_key(space.m, space.k, space.n, "bfloat16", "analytical_tpu_v5e")
+    cost = AnalyticalTPUCost(space)
+    eng1 = MeasureEngine(cost, n_workers=4, journal=TrialJournal(jpath), workload_key=wkey)
+    r1 = GBFSTuner(space, cost, seed=0).tune(Budget(max_trials=60), engine=eng1)
+    assert r1.n_cache_hits == 0
+
+    journal2 = TrialJournal(jpath)  # reload from disk: a "new session"
+    assert len(journal2) == 60
+    eng2 = MeasureEngine(cost, n_workers=4, journal=journal2, workload_key=wkey)
+    r2 = GBFSTuner(space, cost, seed=0).tune(Budget(max_trials=60), engine=eng2)
+    assert [t.state.key() for t in r2.trials] == [t.state.key() for t in r1.trials]
+    assert r2.n_cache_hits == 60 and r2.cache_hit_rate == 1.0
+    assert r2.clock_s == 0.0
+    assert r2.best_cost == r1.best_cost
+
+
+def test_journal_scoped_by_measurement_settings(tmp_path, space):
+    """Entries journaled under one noise model / seed / repeat count must
+    never be served to a backend with different settings."""
+    jpath = str(tmp_path / "j.jsonl")
+    wkey = workload_key(space.m, space.k, space.n, "bfloat16", "analytical_tpu_v5e")
+
+    def run(noise, seed):
+        cost = AnalyticalTPUCost(space, noise_sigma=noise, seed=seed)
+        eng = MeasureEngine(
+            cost, n_workers=4, journal=TrialJournal(jpath), workload_key=wkey
+        )
+        return GBFSTuner(space, cost, seed=0).tune(Budget(max_trials=40), engine=eng)
+
+    r1 = run(0.05, 0)
+    assert r1.n_cache_hits == 0
+    assert run(0.3, 0).n_cache_hits == 0  # different noise: no sharing
+    assert run(0.05, 1).n_cache_hits == 0  # different seed: no sharing
+    assert run(0.05, 0).n_cache_hits == 40  # same settings: full cache
+
+
+def test_engine_arg_conflicts_rejected(space):
+    """Passing an engine plus conflicting overhead/worker arguments must
+    raise instead of silently dropping the arguments."""
+    cost = AnalyticalTPUCost(space)
+    engine = MeasureEngine(cost, n_workers=2, overhead_s=0.5)
+    with pytest.raises(ValueError):
+        GBFSTuner(space, cost, seed=0).tune(
+            Budget(max_trials=5), n_workers=8, engine=engine
+        )
+    with pytest.raises(ValueError):
+        GBFSTuner(space, cost, seed=0).tune(
+            Budget(max_trials=5), overhead_s=0.35, engine=engine
+        )
+
+
+def test_journal_caches_failed_builds(tmp_path):
+    space = GemmConfigSpace(4096, 4096, 4096)
+    cost = AnalyticalTPUCost(space)
+    jpath = str(tmp_path / "inf.jsonl")
+    j = TrialJournal(jpath)
+    wkey = "gemm/m4096k4096n4096/bfloat16/analytical_tpu_v5e"
+    from repro.core.config_space import TilingState
+
+    bad = TilingState((1, 1, 1, 4096), (1, 4096), (1, 4096, 1, 1))
+    j.record(wkey, bad, math.inf)
+    j2 = TrialJournal(jpath)
+    assert math.isinf(j2.get(wkey, bad.key()))
+
+
+def test_warm_start_from_nearest_shape(tmp_path):
+    records = TuningRecords(str(tmp_path / "rec.json"))
+    session = TuningSession(
+        records, seed=0, verbose=False, journal=TrialJournal(str(tmp_path / "j.jsonl"))
+    )
+    small = GemmWorkload(64, 64, 64)
+    session.tune_workload(small, "g-bfs", Budget(max_trials=150))
+    big = GemmWorkload(128, 128, 128)
+    s0 = session.warm_start_state(big, big.space(), "analytical_tpu_v5e")
+    assert s0 is not None and big.space().is_legitimate(s0)
+    # warm-started search must start from the transplanted donor, not s0
+    res = session.tune_workload(
+        big, "g-bfs", Budget(max_trials=30), warm_start=True
+    )
+    assert res.trials[0].state.key() == s0.key()
+
+
+def test_tune_cli_workers_and_warm_start(tmp_path):
+    """The tune CLI writes records + a trial journal with --workers, and
+    a --warm-start re-run is served from the journal cache."""
+    import sys
+
+    from repro.launch import tune as tune_mod
+
+    argv = sys.argv
+    base = [
+        "tune", "--arch", "whisper-tiny", "--shape", "train_4k",
+        "--tuner", "g-bfs", "--max-trials", "60", "--fraction", "1.0",
+        "--records", str(tmp_path / "r.json"), "--workers", "4",
+    ]
+    try:
+        sys.argv = base
+        tune_mod.main()
+        sys.argv = base + ["--warm-start"]
+        tune_mod.main()
+    finally:
+        sys.argv = argv
+    rec = TuningRecords(str(tmp_path / "r.json"))
+    assert len(rec) >= 3
+    journal = TrialJournal(str(tmp_path / "r.json") + ".journal.jsonl")
+    assert len(journal) > 0
+
+
+def test_tune_arch_shares_budget_and_dedups_shapes(tmp_path):
+    session = TuningSession(
+        TuningRecords(str(tmp_path / "rec.json")),
+        seed=0,
+        verbose=False,
+        journal=TrialJournal(str(tmp_path / "j.jsonl")),
+    )
+    wls = [
+        GemmWorkload(128, 128, 128, label="a/qkv"),
+        GemmWorkload(128, 128, 128, label="a/attn_out"),  # duplicate shape
+        GemmWorkload(128, 128, 256, label="a/ffn_in"),
+    ]
+    report = session.tune_arch(
+        workloads=wls, budget=Budget(max_trials=90), n_workers=4
+    )
+    assert set(report.results) == {"a/qkv", "a/attn_out", "a/ffn_in"}
+    assert report.results["a/qkv"] is report.results["a/attn_out"]
+    assert report.n_unique_shapes == 2
+    assert report.total_trials <= 90
+    # a re-run over the same shapes is served from the shared journal
+    session2 = TuningSession(
+        TuningRecords(str(tmp_path / "rec.json")),
+        seed=0,
+        verbose=False,
+        journal=TrialJournal(str(tmp_path / "j.jsonl")),
+    )
+    report2 = session2.tune_arch(
+        workloads=wls, budget=Budget(max_trials=90), n_workers=4
+    )
+    assert report2.stats.n_cache_hits > 0

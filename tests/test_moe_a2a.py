@@ -9,6 +9,10 @@ import sys
 
 import pytest
 
+pytest.importorskip(
+    "repro.dist", reason="repro.dist subsystem not present in this tree yet"
+)
+
 SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 
 

