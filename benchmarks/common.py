@@ -41,25 +41,39 @@ def true_cost(space: GemmConfigSpace, state) -> float:
 
 
 def run_tuner(space, tuner_name: str, budget: Budget, seed: int = 0,
-              noise: float = 0.1, n_workers: int = 1, journal=None):
+              noise: float = 0.1, n_workers: int = 1, journal=None,
+              executor=None):
     """One tuning run under the paper protocol.  ``n_workers`` spreads
     each proposed candidate batch over parallel engine lanes (the trial
-    sequence is unchanged; only the simulated clock compresses);
-    ``journal`` plugs in a persistent trial cache."""
+    sequence is unchanged; only the clock compresses); ``journal`` plugs
+    in a persistent trial cache.  ``executor`` (a LaneExecutor or a
+    ``sim``/``thread``/``process`` name) picks how lanes run — with a
+    real executor the clock is *measured* lane wall time, so reported
+    speedups are wall-clock parallelism, not simulated compression."""
+    from repro.core.executor import make_executor
+
     cost = make_cost(space, seed=seed, noise=noise)
+    owns_executor = isinstance(executor, str)
+    if owns_executor:
+        executor = make_executor(executor)
     engine = None
-    if journal is not None or n_workers > 1:
+    if journal is not None or n_workers > 1 or executor is not None:
         engine = MeasureEngine(
             cost,
             n_workers=n_workers,
             journal=journal,
             workload_key=workload_key(space.m, space.k, space.n, "bfloat16", cost.name),
+            executor=executor,
         )
     tuner = TUNERS[tuner_name](space, cost, seed=seed, **TUNER_KW.get(tuner_name, {}))
-    if engine is not None:
-        res = tuner.tune(budget, engine=engine)  # engine owns the clock model
-    else:
-        res = tuner.tune(budget, overhead_s=0.35, n_workers=n_workers)
+    try:
+        if engine is not None:
+            res = tuner.tune(budget, engine=engine)  # engine owns the clock model
+        else:
+            res = tuner.tune(budget, overhead_s=0.35, n_workers=n_workers)
+    finally:
+        if owns_executor:
+            executor.close()
     final = (
         true_cost(space, res.best_state) if res.best_state is not None else math.inf
     )

@@ -6,9 +6,12 @@
     within a fixed search-time budget (750 simulated seconds), 10 trials
     on (1024,1024,1024).
 
-Each fig8a row carries the engine's worker count and cache-hit rate
-(``workers=…,cache_hit=…``) so any clock difference between runs is
-attributable; fig8b emits one ``fig8bengine`` row per tuner.  NOTE:
+Each fig8a row carries the engine's worker count, lane executor, and
+cache-hit rate (``workers=…,executor=…,cache_hit=…``) so any clock
+difference between runs is attributable — and so simulated-clock
+compression (``sim``) is never confused with measured wall-clock
+parallelism (``thread``/``process``); fig8b emits one ``fig8bengine``
+row per tuner.  NOTE:
 under a *time* budget (8b), ``--workers > 1`` genuinely changes the
 search — the compressed clock lets every tuner afford more trials
 before the budget expires.
@@ -23,7 +26,8 @@ from repro.core import Budget, GemmConfigSpace
 from .common import PAPER_TUNERS, run_tuner
 
 
-def fig8a(tuners=None, seeds: int = 3, n_workers: int = 1) -> dict:
+def fig8a(tuners=None, seeds: int = 3, n_workers: int = 1,
+          executor: str | None = None) -> dict:
     tuners = tuners or PAPER_TUNERS
     out = {}
     for size in (512, 1024, 2048):
@@ -33,7 +37,7 @@ def fig8a(tuners=None, seeds: int = 3, n_workers: int = 1) -> dict:
             for s in range(seeds):
                 res, final = run_tuner(
                     space, tuner, Budget(max_fraction=0.001), seed=s,
-                    n_workers=n_workers,
+                    n_workers=n_workers, executor=executor,
                 )
                 finals.append(final)
                 hits += res.n_cache_hits
@@ -42,14 +46,15 @@ def fig8a(tuners=None, seeds: int = 3, n_workers: int = 1) -> dict:
             out[(size, tuner)] = mean
             print(
                 f"fig8a,{size},{tuner},{mean*1e6:.3f},"
-                f"workers={n_workers},cache_hit={hits / max(1, trials):.3f}",
+                f"workers={n_workers},executor={res.executor},"
+                f"cache_hit={hits / max(1, trials):.3f}",
                 flush=True,
             )
     return out
 
 
 def fig8b(tuners=None, trials: int = 10, time_budget_s: float = 750.0,
-          n_workers: int = 1) -> dict:
+          n_workers: int = 1, executor: str | None = None) -> dict:
     tuners = tuners or PAPER_TUNERS
     space = GemmConfigSpace(1024, 1024, 1024)
     out = {}
@@ -58,7 +63,7 @@ def fig8b(tuners=None, trials: int = 10, time_budget_s: float = 750.0,
         for seed in range(trials):
             res, final = run_tuner(
                 space, tuner, Budget(max_time_s=time_budget_s), seed=seed,
-                n_workers=n_workers,
+                n_workers=n_workers, executor=executor,
             )
             finals.append(final * 1e6)
             hits += res.n_cache_hits
@@ -82,18 +87,18 @@ def fig8b(tuners=None, trials: int = 10, time_budget_s: float = 750.0,
             flush=True,
         )
         print(
-            f"fig8bengine,{tuner},workers={n_workers},"
+            f"fig8bengine,{tuner},workers={n_workers},executor={res.executor},"
             f"cache_hit={hits / max(1, n_meas):.3f},mean_trials={n_meas / max(1, trials):.0f}",
             flush=True,
         )
     return out
 
 
-def main(quick: bool = False, n_workers: int = 1):
-    a = fig8a(seeds=1 if quick else 3, n_workers=n_workers)
+def main(quick: bool = False, n_workers: int = 1, executor: str | None = None):
+    a = fig8a(seeds=1 if quick else 3, n_workers=n_workers, executor=executor)
     b = fig8b(trials=3 if quick else 10,
               time_budget_s=300.0 if quick else 750.0,
-              n_workers=n_workers)
+              n_workers=n_workers, executor=executor)
     return a, b
 
 
@@ -103,5 +108,9 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--workers", type=int, default=1)
+    ap.add_argument("--executor", default=None,
+                    choices=["sim", "thread", "process"],
+                    help="lane executor; sim = simulated clock (default), "
+                         "thread/process = measured wall-clock lanes")
     args = ap.parse_args()
-    main(quick=args.quick, n_workers=args.workers)
+    main(quick=args.quick, n_workers=args.workers, executor=args.executor)

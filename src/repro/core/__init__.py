@@ -9,7 +9,16 @@ Public surface:
 """
 
 from .config_space import Action, GemmConfigSpace, TilingState
-from .cost import AnalyticalTPUCost, CostBackend, CountingCost, TpuSpec
+from .cost import AnalyticalTPUCost, CostBackend, CountingCost, SleepingCost, TpuSpec
+from .executor import (
+    EXECUTORS,
+    LaneExecutor,
+    LaneResult,
+    ProcessExecutor,
+    SimulatedExecutor,
+    ThreadExecutor,
+    make_executor,
+)
 from .measure import MeasureEngine, MeasureOutcome, MeasureStats
 from .records import (
     TrialJournal,
@@ -38,7 +47,15 @@ __all__ = [
     "AnalyticalTPUCost",
     "CostBackend",
     "CountingCost",
+    "SleepingCost",
     "TpuSpec",
+    "EXECUTORS",
+    "LaneExecutor",
+    "LaneResult",
+    "ProcessExecutor",
+    "SimulatedExecutor",
+    "ThreadExecutor",
+    "make_executor",
     "MeasureEngine",
     "MeasureOutcome",
     "MeasureStats",

@@ -1,10 +1,12 @@
-from .base import CostBackend, CountingCost
+from .base import CostBackend, CountingCost, SleepingCost, backend_from_spec
 from .analytical import AnalyticalTPUCost, TpuSpec
 from .measured import XLATimedCost, PallasInterpretCost
 
 __all__ = [
     "CostBackend",
     "CountingCost",
+    "SleepingCost",
+    "backend_from_spec",
     "AnalyticalTPUCost",
     "TpuSpec",
     "XLATimedCost",

@@ -35,6 +35,22 @@ from .base import CostBackend
 __all__ = ["TpuSpec", "AnalyticalTPUCost"]
 
 
+def _analytical_from_spec(
+    m: int, k: int, n: int, d_m: int, d_k: int, d_n: int,
+    n_repeats: int, in_bytes: int, out_bytes: int,
+    noise_sigma: float, seed: int,
+) -> "AnalyticalTPUCost":
+    """Worker-process factory (see ``CostBackend.worker_spec``)."""
+    return AnalyticalTPUCost(
+        GemmConfigSpace(m, k, n, d_m, d_k, d_n),
+        n_repeats=n_repeats,
+        in_bytes=in_bytes,
+        out_bytes=out_bytes,
+        noise_sigma=noise_sigma,
+        seed=seed,
+    )
+
+
 class TpuSpec:
     """TPU v5e-like single-chip constants (shared with §Roofline)."""
 
@@ -119,6 +135,24 @@ class AnalyticalTPUCost(CostBackend):
         return (
             f"r{self.n_repeats}|noise{self.noise_sigma:g}|seed{self.seed}"
             f"|io{self.in_bytes}.{self.out_bytes}"
+        )
+
+    def worker_spec(self):
+        # extra_constraint is an arbitrary closure and self.spec could be
+        # subclassed — neither survives the spec round-trip, so refuse to
+        # ship rather than rebuild a subtly different model
+        if self.space.extra_constraint is not None or type(self.spec) is not TpuSpec:
+            return None
+        sp = self.space
+        return (
+            "repro.core.cost.analytical:_analytical_from_spec",
+            {
+                "m": sp.m, "k": sp.k, "n": sp.n,
+                "d_m": sp.d_m, "d_k": sp.d_k, "d_n": sp.d_n,
+                "n_repeats": self.n_repeats,
+                "in_bytes": self.in_bytes, "out_bytes": self.out_bytes,
+                "noise_sigma": self.noise_sigma, "seed": self.seed,
+            },
         )
 
     def _noise_factor(self, s: TilingState, repeat_idx: int) -> float:

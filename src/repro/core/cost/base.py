@@ -18,18 +18,39 @@ Backends expose two entry points:
 Whatever the override, ``batch_cost(states)[i]`` must equal
 ``cost(states[i])`` for a fresh backend — batching changes time
 accounting, never values.
+
+For *process-backed* measurement lanes
+(:class:`~repro.core.executor.ProcessExecutor`), a backend additionally
+advertises a **worker spec** — a picklable ``("module:callable",
+kwargs)`` recipe that worker processes use to rebuild an equivalent
+backend on their side of the process boundary (the backend object
+itself is never pickled; JAX arrays and compiled-function caches don't
+survive a pickle round-trip).  ``worker_spec()`` returns ``None`` for
+backends that cannot be shipped.
 """
 
 from __future__ import annotations
 
 import abc
+import importlib
 import math
+import operator
+import os
 import time
-from typing import Sequence
+from typing import Optional, Sequence
 
 from ..config_space import GemmConfigSpace, TilingState
 
-__all__ = ["CostBackend", "CountingCost"]
+__all__ = ["CostBackend", "CountingCost", "SleepingCost", "backend_from_spec"]
+
+
+def backend_from_spec(spec: tuple[str, dict]) -> "CostBackend":
+    """Rebuild a backend from a :meth:`CostBackend.worker_spec` recipe —
+    the worker-process side of the executor boundary."""
+    entry, kwargs = spec
+    mod_name, _, attr = entry.partition(":")
+    fn = operator.attrgetter(attr)(importlib.import_module(mod_name))
+    return fn(**kwargs)
 
 
 class CostBackend(abc.ABC):
@@ -67,6 +88,14 @@ class CostBackend(abc.ABC):
         different settings — e.g. a different noise model or repeat
         count — as if it were this backend's measurement."""
         return f"r{self.n_repeats}"
+
+    def worker_spec(self) -> Optional[tuple[str, dict]]:
+        """Picklable ``("module:callable", kwargs)`` recipe that rebuilds
+        an equivalent backend inside a measurement worker process, or
+        ``None`` when this backend cannot cross a process boundary (see
+        :func:`backend_from_spec`).  The rebuilt backend must produce the
+        same costs as this one."""
+        return None
 
 
 class CountingCost(CostBackend):
@@ -133,3 +162,89 @@ class CountingCost(CostBackend):
 
     def fraction_explored(self) -> float:
         return self.n_measured / max(1, self.space.size())
+
+
+def _sleeping_from_spec(
+    inner: tuple[str, dict],
+    delay_s: float,
+    hang_s: float,
+    raise_keys: list,
+    exit_keys: list,
+    hang_keys: list,
+) -> "SleepingCost":
+    return SleepingCost(
+        backend_from_spec(inner),
+        delay_s=delay_s,
+        hang_s=hang_s,
+        raise_keys=raise_keys,
+        exit_keys=exit_keys,
+        hang_keys=hang_keys,
+    )
+
+
+class SleepingCost(CostBackend):
+    """Hardware-in-the-loop stand-in: returns the inner backend's costs
+    but *occupies real wall-clock* — ``delay_s`` of sleep per measurement,
+    the way a device occupies a measurement lane.  This is what the
+    executor layer is exercised and benchmarked against in a container
+    with no accelerator: real lanes (threads/processes) overlap the
+    sleeps, the simulated lane cannot.
+
+    Failure injection (for executor crash/timeout isolation tests):
+    states whose ``key()`` is in ``raise_keys`` raise, ``exit_keys``
+    hard-kill the measuring process via ``os._exit`` (only meaningful
+    under a :class:`~repro.core.executor.ProcessExecutor` — in-process it
+    kills the session, which is exactly the failure mode process lanes
+    exist to contain), and ``hang_keys`` sleep ``hang_s`` to trip the
+    per-lane timeout.
+    """
+
+    def __init__(
+        self,
+        inner: CostBackend,
+        delay_s: float = 0.05,
+        hang_s: float = 3600.0,
+        raise_keys: Sequence[str] = (),
+        exit_keys: Sequence[str] = (),
+        hang_keys: Sequence[str] = (),
+    ):
+        super().__init__(inner.space, n_repeats=1)
+        self.inner = inner
+        self.name = f"sleeping({inner.name})"
+        self.delay_s = delay_s
+        self.hang_s = hang_s
+        self.raise_keys = frozenset(raise_keys)
+        self.exit_keys = frozenset(exit_keys)
+        self.hang_keys = frozenset(hang_keys)
+
+    def cost_once(self, s: TilingState, repeat_idx: int) -> float:  # pragma: no cover
+        raise RuntimeError("SleepingCost delegates via cost()")
+
+    def cost(self, s: TilingState) -> float:
+        key = s.key()
+        if key in self.exit_keys:
+            os._exit(13)  # simulated segfault: no exception, no cleanup
+        if key in self.raise_keys:
+            raise RuntimeError(f"injected measurement failure for {key}")
+        time.sleep(self.hang_s if key in self.hang_keys else self.delay_s)
+        return self.inner.cost(s)
+
+    def measure_fingerprint(self) -> str:
+        # sleeping changes lane occupancy, never the measured value
+        return self.inner.measure_fingerprint()
+
+    def worker_spec(self) -> Optional[tuple[str, dict]]:
+        inner_spec = self.inner.worker_spec()
+        if inner_spec is None:
+            return None
+        return (
+            "repro.core.cost.base:_sleeping_from_spec",
+            {
+                "inner": inner_spec,
+                "delay_s": self.delay_s,
+                "hang_s": self.hang_s,
+                "raise_keys": sorted(self.raise_keys),
+                "exit_keys": sorted(self.exit_keys),
+                "hang_keys": sorted(self.hang_keys),
+            },
+        )

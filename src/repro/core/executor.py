@@ -1,0 +1,390 @@
+"""Measurement lane executors — how a wave of candidate states actually
+runs.
+
+PR 1 gave :class:`~repro.core.measure.MeasureEngine` ``n_workers``
+*simulated* lanes: the search clock compresses by the wave critical
+path, but the backend work itself still runs in the calling thread.
+This module makes the lane a pluggable boundary, the way TVM's tuners
+ship measurement batches to an RPC/executor pool:
+
+* :class:`SimulatedExecutor` — the PR-1 semantics, bit for bit: a
+  single-miss wave takes the backend's scalar ``cost`` path, a
+  multi-miss wave takes ``batch_cost``, nothing leaves the calling
+  thread, and lane occupancy is *modeled* (overhead + capped runtime).
+  This is the default and keeps every ``--workers 1`` parity guarantee.
+* :class:`ThreadExecutor` — each lane is a thread running
+  ``backend.cost``; real wall-clock overlap for backends that release
+  the GIL (XLA compile/execute, sleeps).  A lane that raises is an
+  ``inf``-cost outcome; a lane that exceeds the timeout is abandoned
+  (the thread cannot be killed — it keeps running detached, which is
+  why crash-grade isolation needs processes).
+
+Real executors own their **kill timeout** (``timeout_s``, default 60 s):
+it bounds how long a lane may *really* run before being abandoned or
+killed.  This is deliberately distinct from ``MeasureEngine.timeout_s``,
+which is the simulated clock's AutoTVM-style *charging cap* — a slow
+config charges at most that much search clock, it is never killed for
+it.  Conflating the two would kill every legitimately slow real
+measurement (an XLA compile easily outlives a 4 s charging cap).
+* :class:`ProcessExecutor` — each lane is a persistent worker *process*
+  fed ``(backend_spec, state)`` jobs over a pipe.  The backend is
+  rebuilt worker-side from ``CostBackend.worker_spec()`` and cached
+  per spec, so per-job cost is one pipe round-trip.  A worker that
+  raises reports the error and lives on; a worker that dies (segfault,
+  ``os._exit``, OOM-kill) or blows the per-lane timeout is reaped and
+  respawned, and its lane resolves to ``inf`` — a backend crash can no
+  longer take down the tuning session.
+
+Executors with ``real_time = True`` report *measured* per-lane wall
+seconds; the engine charges those to the search clock instead of the
+simulated occupancy model, so benchmark speedups separate clock
+compression (simulated) from genuine parallel measurement (real).
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+import math
+import multiprocessing
+import time
+from typing import Optional, Sequence
+
+from .config_space import TilingState
+from .cost.base import CostBackend, backend_from_spec
+
+__all__ = [
+    "LaneExecutor",
+    "LaneResult",
+    "SimulatedExecutor",
+    "ThreadExecutor",
+    "ProcessExecutor",
+    "EXECUTORS",
+    "make_executor",
+]
+
+
+@dataclasses.dataclass
+class LaneResult:
+    """What one measurement lane hands back for one state."""
+
+    cost: float
+    wall_s: float = 0.0  # measured lane wall time (0 under simulation)
+    error: Optional[str] = None  # crash / timeout / raised-exception note
+
+
+class LaneExecutor(abc.ABC):
+    """Runs the cache-miss portion of one measurement wave."""
+
+    name: str = "base"
+    #: True when ``LaneResult.wall_s`` is measured wall-clock the engine
+    #: should charge, False when occupancy must come from the clock model.
+    real_time: bool = False
+
+    @abc.abstractmethod
+    def run_wave(
+        self,
+        backend: CostBackend,
+        states: Sequence[TilingState],
+        timeout_s: Optional[float] = None,
+    ) -> list[LaneResult]:
+        """Measure ``states`` (one per lane); results align with input."""
+
+    def close(self) -> None:
+        """Release lanes (threads/processes). Idempotent."""
+
+    def __enter__(self) -> "LaneExecutor":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class SimulatedExecutor(LaneExecutor):
+    """The historical in-thread path: scalar ``cost`` for single-miss
+    waves (n_workers=1 parity), ``batch_cost`` otherwise."""
+
+    name = "sim"
+    real_time = False
+
+    def run_wave(self, backend, states, timeout_s=None):
+        if len(states) == 1:
+            costs = [backend.cost(states[0])]
+        else:
+            costs = list(backend.batch_cost(states))
+        return [LaneResult(cost=c) for c in costs]
+
+
+class ThreadExecutor(LaneExecutor):
+    """One daemon thread per lane (waves are measurement-bound, so
+    per-wave thread spawn is noise).  Real overlap only where the
+    backend drops the GIL; a timed-out lane is abandoned — daemon
+    threads mean an abandoned lane can never block interpreter
+    shutdown the way a ThreadPoolExecutor's atexit join would."""
+
+    name = "thread"
+    real_time = True
+
+    def __init__(self, timeout_s: Optional[float] = 60.0):
+        self.timeout_s = timeout_s  # kill timeout; None = never abandon
+
+    def run_wave(self, backend, states, timeout_s=None):
+        import threading
+
+        timeout = timeout_s if timeout_s is not None else self.timeout_s
+        box: list[Optional[LaneResult]] = [None] * len(states)
+
+        def lane(i: int, s: TilingState) -> None:
+            t0 = time.perf_counter()
+            try:
+                c = backend.cost(s)
+                box[i] = LaneResult(cost=c, wall_s=time.perf_counter() - t0)
+            except BaseException as e:  # noqa: BLE001 — lane isolation
+                box[i] = LaneResult(
+                    cost=math.inf,
+                    wall_s=time.perf_counter() - t0,
+                    error=f"{type(e).__name__}: {e}",
+                )
+
+        threads = [
+            threading.Thread(
+                target=lane, args=(i, s), daemon=True, name=f"measure-lane-{i}"
+            )
+            for i, s in enumerate(states)
+        ]
+        t_start = time.perf_counter()
+        for t in threads:
+            t.start()
+        results: list[LaneResult] = []
+        for i, t in enumerate(threads):
+            remaining = (
+                None
+                if timeout is None
+                else max(0.0, t_start + timeout - time.perf_counter())
+            )
+            t.join(remaining)
+            if t.is_alive():  # abandoned: its eventual box write is dropped
+                results.append(
+                    LaneResult(
+                        cost=math.inf,
+                        wall_s=time.perf_counter() - t_start,
+                        error=f"lane timeout after {timeout:g}s",
+                    )
+                )
+            else:
+                results.append(box[i])
+        return results
+
+
+def _worker_main(conn) -> None:
+    """Measurement worker loop: rebuild backends from specs (cached per
+    spec), measure one state per job, report ``("ok", cost, wall)`` or
+    ``("err", message)``.  Runs until the sentinel ``None`` or parent
+    death."""
+    backends: dict = {}
+    while True:
+        try:
+            job = conn.recv()
+        except (EOFError, OSError):
+            return
+        if job is None:
+            return
+        if job == "ping":  # liveness probe (see ProcessExecutor.warm_up)
+            conn.send("pong")
+            continue
+        spec, state_lists = job
+        try:
+            key = repr(spec)
+            backend = backends.get(key)
+            if backend is None:
+                backend = backends[key] = backend_from_spec(spec)
+            t0 = time.perf_counter()
+            cost = backend.cost(TilingState.from_lists(state_lists))
+            conn.send(("ok", cost, time.perf_counter() - t0))
+        except BaseException as e:  # noqa: BLE001 — the worker must survive
+            try:
+                conn.send(("err", f"{type(e).__name__}: {e}"))
+            except (BrokenPipeError, OSError):
+                return
+
+
+class _Worker:
+    """One lane: a persistent process plus its duplex pipe."""
+
+    def __init__(self, ctx):
+        self.conn, child = ctx.Pipe()
+        self.proc = ctx.Process(target=_worker_main, args=(child,), daemon=True)
+        self.proc.start()
+        child.close()  # parent keeps only its end
+
+    def alive(self) -> bool:
+        return self.proc.is_alive()
+
+    def kill(self) -> None:
+        try:
+            self.proc.terminate()
+            self.proc.join(timeout=2.0)
+        except (ValueError, OSError):
+            pass
+        self.conn.close()
+
+    def stop(self) -> None:
+        """Graceful: sentinel, short join, then terminate."""
+        try:
+            self.conn.send(None)
+        except (BrokenPipeError, OSError):
+            pass
+        self.proc.join(timeout=2.0)
+        if self.proc.is_alive():
+            self.proc.terminate()
+            self.proc.join(timeout=2.0)
+        self.conn.close()
+
+
+class ProcessExecutor(LaneExecutor):
+    """Persistent worker-process lanes with per-lane timeouts and crash
+    isolation (TVM's measure-worker pattern, pipes instead of RPC).
+
+    Requires ``backend.worker_spec()`` — the backend is rebuilt inside
+    each worker, never pickled.  ``mp_context`` defaults to
+    ``forkserver`` where available (workers fork from a clean server
+    process: no ``__main__`` re-import, and safe once JAX/XLA threads
+    exist in the parent — which plain ``fork`` is not), falling back to
+    ``spawn`` elsewhere.
+    """
+
+    name = "process"
+    real_time = True
+
+    def __init__(
+        self,
+        timeout_s: Optional[float] = 60.0,
+        mp_context: Optional[str] = None,
+        spawn_timeout_s: float = 120.0,
+    ):
+        self.timeout_s = timeout_s  # per-lane kill timeout; None = wait forever
+        self.spawn_timeout_s = spawn_timeout_s
+        if mp_context is None:
+            methods = multiprocessing.get_all_start_methods()
+            mp_context = "forkserver" if "forkserver" in methods else "spawn"
+        self._ctx = multiprocessing.get_context(mp_context)
+        self._workers: list[_Worker] = []
+
+    def _ensure_workers(self, n: int) -> None:
+        """Reap dead workers and spawn up to ``n``, blocking until fresh
+        ones answer a liveness ping — interpreter start-up and repro
+        imports must never count against a lane's measurement timeout."""
+        self._workers = [w for w in self._workers if w.alive()]
+        fresh: list[_Worker] = []
+        while len(self._workers) < n:
+            w = _Worker(self._ctx)
+            self._workers.append(w)
+            fresh.append(w)
+        for w in fresh:
+            try:
+                w.conn.send("ping")
+            except (BrokenPipeError, OSError):
+                pass
+        deadline = time.perf_counter() + self.spawn_timeout_s
+        for w in fresh:
+            try:
+                if w.conn.poll(max(0.0, deadline - time.perf_counter())):
+                    w.conn.recv()
+            except (EOFError, OSError):
+                pass  # dead at birth: run_wave resolves its lane to inf
+
+    def run_wave(self, backend, states, timeout_s=None):
+        spec = backend.worker_spec()
+        if spec is None:
+            raise ValueError(
+                f"backend {backend.name!r} has no worker_spec(); "
+                "ProcessExecutor needs a process-shippable backend recipe "
+                "(use ThreadExecutor or SimulatedExecutor instead)"
+            )
+        timeout = timeout_s if timeout_s is not None else self.timeout_s
+        self._ensure_workers(len(states))
+        lanes = self._workers[: len(states)]
+        sent_t: list[float] = []
+        dead_on_send: set[int] = set()
+        for i, (w, s) in enumerate(zip(lanes, states)):
+            try:
+                w.conn.send((spec, s.as_lists()))
+            except (BrokenPipeError, OSError):
+                dead_on_send.add(i)
+            sent_t.append(time.perf_counter())
+        results: list[LaneResult] = []
+        for i, w in enumerate(lanes):
+            if i in dead_on_send:
+                w.kill()
+                results.append(
+                    LaneResult(cost=math.inf, error="worker died before dispatch")
+                )
+                continue
+            remaining = (
+                None
+                if timeout is None
+                else max(0.0, sent_t[i] + timeout - time.perf_counter())
+            )
+            try:
+                if not w.conn.poll(remaining):
+                    w.kill()
+                    results.append(
+                        LaneResult(
+                            cost=math.inf,
+                            wall_s=time.perf_counter() - sent_t[i],
+                            error=f"lane timeout after {timeout:g}s (worker killed)",
+                        )
+                    )
+                    continue
+                msg = w.conn.recv()
+            except (EOFError, OSError):
+                w.kill()
+                results.append(
+                    LaneResult(
+                        cost=math.inf,
+                        wall_s=time.perf_counter() - sent_t[i],
+                        error="worker crashed mid-measurement",
+                    )
+                )
+                continue
+            if msg[0] == "ok":
+                results.append(LaneResult(cost=msg[1], wall_s=msg[2]))
+            else:
+                results.append(
+                    LaneResult(
+                        cost=math.inf,
+                        wall_s=time.perf_counter() - sent_t[i],
+                        error=msg[1],
+                    )
+                )
+        return results
+
+    def warm_up(self, n_lanes: int) -> None:
+        """Pre-spawn ``n_lanes`` ready workers so not even the *first*
+        wave's wall-clock includes process start-up (``run_wave`` already
+        excludes start-up from lane timeouts via ``_ensure_workers``)."""
+        self._ensure_workers(n_lanes)
+
+    def close(self) -> None:
+        workers, self._workers = self._workers, []
+        for w in workers:
+            if w.alive():
+                w.stop()
+            else:
+                w.kill()
+
+
+EXECUTORS = {
+    "sim": SimulatedExecutor,
+    "thread": ThreadExecutor,
+    "process": ProcessExecutor,
+}
+
+
+def make_executor(name: str, **kwargs) -> LaneExecutor:
+    """Build a lane executor by CLI name (``sim``/``thread``/``process``)."""
+    try:
+        cls = EXECUTORS[name]
+    except KeyError:
+        raise ValueError(f"unknown executor {name!r}; pick from {sorted(EXECUTORS)}")
+    return cls(**kwargs)

@@ -8,9 +8,16 @@ and by never re-measuring a configuration they have already seen.
 :class:`MeasureEngine` packages both:
 
   * **lanes** — up to ``n_workers`` states are measured concurrently;
-    a wave's simulated duration is the *max* of its lane times, not the
-    sum, which is what makes ``n_workers=8`` roughly 8x cheaper on the
-    search clock for batch-proposing tuners;
+    a wave's duration is the *max* of its lane times, not the sum, which
+    is what makes ``n_workers=8`` roughly 8x cheaper on the search clock
+    for batch-proposing tuners.  *How* a lane runs is delegated to a
+    pluggable :class:`~repro.core.executor.LaneExecutor`: the default
+    :class:`~repro.core.executor.SimulatedExecutor` keeps the historical
+    in-thread semantics (and the ``n_workers=1`` bit-identical parity
+    guarantee), while ``ThreadExecutor`` / ``ProcessExecutor`` measure
+    waves with real thread/process concurrency, per-lane timeouts, and
+    crash isolation — a dead worker is an ``inf``-cost outcome, not a
+    dead session;
   * **trial cache** — an optional :class:`~repro.core.records.TrialJournal`
     is consulted before dispatch, so states measured by *any previous
     session* for the same workload are served in ~zero lane time
@@ -32,6 +39,7 @@ from typing import Optional, Sequence
 
 from .config_space import TilingState
 from .cost.base import CostBackend
+from .executor import LaneExecutor, SimulatedExecutor
 from .records import TrialJournal
 
 __all__ = ["MeasureEngine", "MeasureOutcome", "MeasureStats"]
@@ -44,7 +52,8 @@ class MeasureOutcome:
     state: TilingState
     cost: float
     cache_hit: bool
-    lane_s: float  # simulated lane occupancy: overhead + capped runtime
+    lane_s: float  # lane occupancy: simulated model or measured wall
+    error: Optional[str] = None  # lane failure note (crash/timeout)
 
 
 @dataclasses.dataclass
@@ -57,6 +66,7 @@ class MeasureStats:
     n_waves: int = 0
     lane_busy_s: float = 0.0  # sum of per-lane occupancy
     span_s: float = 0.0  # sum of wave critical paths (what the clock pays)
+    n_failures: int = 0  # lanes that crashed / timed out / raised
 
     @property
     def n_measured(self) -> int:
@@ -79,9 +89,14 @@ class MeasureEngine:
         overhead_s: float = 0.35,
         timeout_s: float = 4.0,
         stats: Optional[MeasureStats] = None,
+        executor: Optional[LaneExecutor] = None,
     ):
         self.backend = backend
         self.n_workers = max(1, int(n_workers))
+        # how a lane runs: simulated (default, bit-identical to the
+        # historical path) or real threads/processes; the engine never
+        # closes it — lifetime belongs to whoever built it
+        self.executor = executor if executor is not None else SimulatedExecutor()
         self.journal = journal
         self.workload_key = workload_key
         # Journal entries are keyed by workload AND measurement settings:
@@ -129,17 +144,23 @@ class MeasureEngine:
                 miss_idx.append(i)
         if miss_idx:
             misses = [states[i] for i in miss_idx]
-            if len(misses) == 1:
-                # single-state waves take the scalar path so that
-                # n_workers=1 runs are bit-identical to the historical
-                # serial measurement loop
-                costs = [self.backend.cost(misses[0])]
-            else:
-                costs = self.backend.batch_cost(misses)
-            for i, s, c in zip(miss_idx, misses, costs):
-                outcomes[i] = MeasureOutcome(s, c, False, self.lane_time(c))
-                if self.journal is not None and self.journal_key is not None:
-                    self.journal.record(self.journal_key, s, c)
+            # NOTE: self.timeout_s is the *simulated charging cap* (a slow
+            # config charges at most that much search clock); the real
+            # executors own their kill timeout separately — conflating the
+            # two would kill legitimately slow measurements (XLA compiles)
+            lanes = self.executor.run_wave(self.backend, misses)
+            for i, s, lane in zip(miss_idx, misses, lanes):
+                lane_s = (
+                    lane.wall_s if self.executor.real_time else self.lane_time(lane.cost)
+                )
+                outcomes[i] = MeasureOutcome(s, lane.cost, False, lane_s, lane.error)
+                if lane.error is not None:
+                    # executor-level failure (crash/timeout/raise): count
+                    # it, but never journal it — a transient worker death
+                    # must not be cached as "this config is infeasible"
+                    self.stats.n_failures += 1
+                elif self.journal is not None and self.journal_key is not None:
+                    self.journal.record(self.journal_key, s, lane.cost)
         done = [o for o in outcomes if o is not None]
         self.stats.n_dispatched += len(miss_idx)
         self.stats.n_cache_hits += len(states) - len(miss_idx)

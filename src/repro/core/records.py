@@ -129,13 +129,24 @@ class TuningRecords:
 class TrialJournal:
     """Append-only measurement log: ``(workload, state) -> cost``.
 
-    Persists as JSONL (one row per measurement) so concurrent engines can
-    append without rewriting, torn tail lines from a crash are simply
-    skipped on reload, and the file is greppable.  The in-memory view is
-    a per-workload cost table plus a running best (state, cost) pair used
-    for warm starts.  ``math.inf`` costs (failed builds) are journaled
-    too — knowing a config fails is exactly as cacheable as knowing its
-    runtime.
+    Persists as strict JSONL — one row per measurement, written as a
+    **single ``write()`` on an ``O_APPEND`` descriptor**, so any number
+    of engines *and processes* can share one journal file without ever
+    interleaving torn rows (POSIX serialises O_APPEND writes).  Failed
+    builds (``math.inf``) are journaled too — knowing a config fails is
+    exactly as cacheable as knowing its runtime — but encoded as
+    ``{"c": null, "fail": true}`` so every row survives strict
+    ``json.loads``; legacy ``Infinity`` rows are still understood on
+    load.  A crash mid-append leaves at most one unterminated tail line,
+    which loading skips (and a later :meth:`reload` re-reads once some
+    surviving writer completes it).
+
+    The in-memory view is a per-workload cost table plus a running best
+    (state, cost) pair used for warm starts.  :meth:`reload` merges rows
+    appended by sibling engines/processes since the last read — the
+    multi-engine sharing primitive.  The journal is a context manager;
+    ``close()`` drops the append descriptor (reopened lazily by the next
+    ``record``).
     """
 
     def __init__(self, path: Optional[str] = None):
@@ -143,18 +154,54 @@ class TrialJournal:
         self._lock = threading.Lock()
         self._costs: dict[str, dict[str, float]] = {}
         self._best: dict[str, tuple[float, list]] = {}
-        self._fh = None
-        if path and os.path.exists(path):
-            with open(path) as f:
-                for line in f:
-                    line = line.strip()
-                    if not line:
-                        continue
-                    try:
-                        row = json.loads(line)
-                        self._ingest(row["w"], row["k"], row["s"], float(row["c"]))
-                    except (ValueError, KeyError):
-                        continue  # torn tail write from a crashed session
+        self._fd: Optional[int] = None
+        self._read_pos = 0  # how far reload() has consumed the file
+        if path:
+            self.reload()
+
+    def __enter__(self) -> "TrialJournal":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    @staticmethod
+    def _row_cost(row: dict) -> float:
+        c = row.get("c")
+        if row.get("fail") or c is None:
+            return math.inf
+        return float(c)  # legacy rows: json.loads already accepts Infinity
+
+    def reload(self) -> int:
+        """Ingest rows appended to the file since the last load —
+        including rows written by *other* engines or processes sharing
+        this journal path.  Returns the number of new rows ingested
+        (rows this instance already holds dedup to zero).  Only complete
+        (newline-terminated) lines are consumed; a torn tail stays
+        unread until a later reload sees it completed."""
+        if not self.path or not os.path.exists(self.path):
+            return 0
+        n_new = 0
+        with self._lock:
+            with open(self.path, "rb") as f:
+                f.seek(self._read_pos)
+                data = f.read()
+            end = data.rfind(b"\n")
+            if end < 0:
+                return 0
+            self._read_pos += end + 1
+            for line in data[: end + 1].splitlines():
+                if not line.strip():
+                    continue
+                try:
+                    row = json.loads(line)
+                    ingested = self._ingest(
+                        row["w"], row["k"], row["s"], self._row_cost(row)
+                    )
+                except (ValueError, KeyError, TypeError):
+                    continue  # torn/foreign line from a crashed writer
+                n_new += int(ingested)
+        return n_new
 
     # -- read ------------------------------------------------------------------
     def get(self, workload: str, state_key: str) -> Optional[float]:
@@ -227,22 +274,36 @@ class TrialJournal:
             if not self._ingest(workload, state.key(), lists, cost):
                 return
             if self.path:
-                if self._fh is None:
+                if self._fd is None:
                     d = os.path.dirname(os.path.abspath(self.path))
                     os.makedirs(d, exist_ok=True)
-                    self._fh = open(self.path, "a")
-                json.dump(
-                    {"w": workload, "k": state.key(), "s": lists, "c": cost},
-                    self._fh,
-                )
-                self._fh.write("\n")
-                self._fh.flush()
+                    self._fd = os.open(
+                        self.path, os.O_WRONLY | os.O_APPEND | os.O_CREAT, 0o644
+                    )
+                row: dict = {"w": workload, "k": state.key(), "s": lists}
+                if math.isfinite(cost):
+                    row["c"] = cost
+                else:
+                    row["c"] = None
+                    row["fail"] = True
+                # one write() per row: O_APPEND makes concurrent appends
+                # from sibling engines/processes atomic, never interleaved.
+                # A short write (disk full, NFS) would tear the row AND
+                # swallow the next sibling's O_APPEND line, so finish or
+                # fail loudly rather than continue with a corrupt tail.
+                line = json.dumps(row, allow_nan=False, separators=(",", ":"))
+                view = memoryview((line + "\n").encode("utf-8"))
+                while view:
+                    view = view[os.write(self._fd, view):]
 
     def close(self) -> None:
+        """Release the append descriptor; the in-memory view (and
+        ``_read_pos``) survive, so the journal stays usable — the next
+        ``record`` reopens lazily."""
         with self._lock:
-            if self._fh is not None:
-                self._fh.close()
-                self._fh = None
+            if self._fd is not None:
+                os.close(self._fd)
+                self._fd = None
 
 
 _GLOBAL = TuningRecords()

@@ -32,6 +32,7 @@ from typing import Callable, Optional, Sequence
 
 from .config_space import GemmConfigSpace, TilingState
 from .cost import AnalyticalTPUCost, CostBackend
+from .executor import LaneExecutor, make_executor
 from .measure import MeasureEngine, MeasureStats
 from .records import TrialJournal, TuningRecords, parse_workload_key, workload_key
 from .tuners import TUNERS, Budget, TuneResult
@@ -65,6 +66,7 @@ class ArchTuneReport:
     stats: MeasureStats
     n_workers: int
     n_unique_shapes: int
+    executor: str = "sim"  # lane executor the arch's engines measured through
 
     @property
     def total_trials(self) -> int:
@@ -114,9 +116,11 @@ class TuningSession:
     ) -> Optional[TilingState]:
         """Initial state for a warm-started search: this workload's own
         best record if one exists, else the best state of the nearest
-        previously-tuned shape transplanted into this space.
-        ``fingerprint`` scopes the journal search to entries measured
-        under the same backend settings (see ``measure_fingerprint``)."""
+        previously-tuned shape transplanted into this space.  Donor scans
+        are scoped to the workload's dtype — a bf16-tuned best must never
+        seed an int8 search, the tile economics differ.  ``fingerprint``
+        scopes the journal search to entries measured under the same
+        backend settings (see ``measure_fingerprint``)."""
         wkey = wl.key(backend_name)
         s = self.records.lookup_state(wkey)
         if s is not None and space.is_legitimate(s):
@@ -126,8 +130,8 @@ class TuningSession:
             parsed = parse_workload_key(key)
             if parsed is None or key == wkey:
                 continue
-            m2, k2, n2, _dt, be2 = parsed
-            if be2 != backend_name:
+            m2, k2, n2, dt2, be2 = parsed
+            if be2 != backend_name or dt2 != wl.dtype:
                 continue
             src = self.records.lookup_state(key)
             if src is None:
@@ -143,7 +147,7 @@ class TuningSession:
                 backend_name if fingerprint is None else f"{backend_name}?{fingerprint}"
             )
             near = self.journal.nearest_workload(
-                wl.m, wl.k, wl.n, backend=jbackend,
+                wl.m, wl.k, wl.n, dtype=wl.dtype, backend=jbackend,
                 exclude=wkey if fingerprint is None else f"{wkey}?{fingerprint}",
             )
             if near is not None:
@@ -175,10 +179,17 @@ class TuningSession:
         warm_start: bool = False,
         engine: Optional[MeasureEngine] = None,
         stats: Optional[MeasureStats] = None,
+        executor: Optional[LaneExecutor] = None,
     ) -> TuneResult:
         space = wl.space()
         cost = self.cost_factory(space)
         wkey = wl.key(cost.name)
+        if engine is not None and executor is not None and engine.executor is not executor:
+            # same convention as TuningContext: the engine owns the
+            # measurement model — reject conflicts, don't silently drop
+            raise ValueError(
+                "executor=... conflicts with the provided engine's executor"
+            )
         if engine is None:
             engine = MeasureEngine(
                 cost,
@@ -186,6 +197,7 @@ class TuningSession:
                 journal=self.journal,
                 workload_key=wkey,
                 stats=stats,
+                executor=executor,
             )
         budget = budget or Budget(max_fraction=0.001)
         tuner_cls = TUNERS[tuner_name]
@@ -231,17 +243,26 @@ class TuningSession:
         warm_start: bool = False,
         workloads: Optional[Sequence[GemmWorkload]] = None,
         tuner_kwargs: Optional[dict] = None,
+        executor: Optional[LaneExecutor | str] = None,
     ) -> ArchTuneReport:
         """Tune every distinct GEMM an architecture executes through one
         shared engine configuration and one shared budget pool.
 
         ``budget.max_trials`` / ``max_time_s`` are treated as the TOTAL
-        across the arch: each remaining workload is allocated an equal
-        share of whatever is left (``max_fraction`` stays per-workload,
-        being space-relative).  Workloads with identical ``(m, k, n,
-        dtype)`` are tuned once and share the result; all engines share
-        the session journal and one :class:`MeasureStats`, so the report
-        can attribute the arch-level speedup to lanes vs cache.
+        across the arch — a hard ceiling: each remaining workload is
+        allocated an equal share of whatever is left, capped at the
+        remainder, so the sum over workloads can never exceed the pool
+        (``max_fraction`` stays per-workload, being space-relative).
+        Workloads with identical ``(m, k, n, dtype)`` are tuned once and
+        share the result; all engines share the session journal and one
+        :class:`MeasureStats`, so the report can attribute the
+        arch-level speedup to lanes vs cache.
+
+        ``executor`` selects how measurement lanes run — a
+        :class:`~repro.core.executor.LaneExecutor` instance, or a name
+        (``"sim"``/``"thread"``/``"process"``) which is built here and
+        closed when the arch finishes.  All workloads share the one
+        executor, so process lanes pay worker start-up once.
         """
         if workloads is None:
             if arch is None:
@@ -261,45 +282,62 @@ class TuningSession:
         left_trials = budget.max_trials
         left_time = budget.max_time_s
         n_left = len(unique)
-        for shape_key, wl in unique.items():
-            if (left_trials is not None and left_trials <= 0) or (
-                left_time is not None and left_time <= 0.0
-            ):
-                break  # shared pool exhausted
-            alloc = Budget(
-                max_trials=None if left_trials is None else max(1, left_trials // n_left),
-                max_time_s=None if left_time is None else left_time / n_left,
-                max_fraction=budget.max_fraction,
-            )
-            res = self.tune_workload(
-                wl,
-                tuner_name,
-                alloc,
-                tuner_kwargs,
-                n_workers=n_workers,
-                warm_start=warm_start,
-                stats=stats,
-            )
-            if left_trials is not None:
-                left_trials -= res.n_trials
-            if left_time is not None:
-                left_time -= res.clock_s
-            n_left -= 1
-            for lbl in labels[shape_key]:
-                results[lbl] = res
+        owns_executor = isinstance(executor, str)
+        exec_obj = make_executor(executor) if isinstance(executor, str) else executor
+        try:
+            for shape_key, wl in unique.items():
+                if (left_trials is not None and left_trials <= 0) or (
+                    left_time is not None and left_time <= 0.0
+                ):
+                    break  # shared pool exhausted
+                alloc = Budget(
+                    # equal share of the remainder, but never more than the
+                    # remainder itself: the pool is a hard ceiling
+                    max_trials=None
+                    if left_trials is None
+                    else min(left_trials, max(1, left_trials // n_left)),
+                    max_time_s=None if left_time is None else left_time / n_left,
+                    max_fraction=budget.max_fraction,
+                )
+                res = self.tune_workload(
+                    wl,
+                    tuner_name,
+                    alloc,
+                    tuner_kwargs,
+                    n_workers=n_workers,
+                    warm_start=warm_start,
+                    stats=stats,
+                    executor=exec_obj,
+                )
+                if left_trials is not None:
+                    left_trials -= res.n_trials
+                if left_time is not None:
+                    left_time -= res.clock_s
+                n_left -= 1
+                for lbl in labels[shape_key]:
+                    results[lbl] = res
+        finally:
+            if owns_executor and exec_obj is not None:
+                exec_obj.close()
+            if self.journal is not None:
+                # drop the append descriptor between archs; the journal
+                # stays usable (record() reopens lazily)
+                self.journal.close()
         report = ArchTuneReport(
             results=results,
             stats=stats,
             n_workers=max(1, n_workers),
             n_unique_shapes=len(unique),
+            executor=exec_obj.name if exec_obj is not None else "sim",
         )
         if self.verbose:
             print(
                 f"[tune-arch] {len(results)} workloads / "
                 f"{report.n_unique_shapes} distinct shapes: "
                 f"trials={report.total_trials} clock={report.total_clock_s:.1f}s "
-                f"workers={report.n_workers} "
-                f"cache_hit={stats.cache_hit_rate():.2f}"
+                f"workers={report.n_workers} executor={report.executor} "
+                f"cache_hit={stats.cache_hit_rate():.2f} "
+                f"lane_failures={stats.n_failures}"
             )
         return report
 

@@ -78,6 +78,7 @@ class TuneResult:
     clock_s: float
     n_workers: int = 1
     n_cache_hits: int = 0  # trials served from the persistent journal
+    executor: str = "sim"  # lane executor the engine measured through
 
     @property
     def cache_hit_rate(self) -> float:
@@ -226,6 +227,7 @@ class TuningContext:
             clock_s=self.clock_s,
             n_workers=self.n_workers,
             n_cache_hits=self.engine.stats.n_cache_hits - h0,
+            executor=self.engine.executor.name,
         )
 
 

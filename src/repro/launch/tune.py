@@ -10,22 +10,29 @@ at trace time.
 
   python -m repro.launch.tune --arch yi-6b --shape train_4k \
       --tuner g-bfs --fraction 0.001 --records records/yi-6b.json \
-      --workers 8 --warm-start
+      --workers 8 --executor process --warm-start
 
 ``--workers N`` measures candidate batches on N parallel engine lanes;
-``--warm-start`` seeds each search from this workload's previous best
-record (or the nearest previously-tuned shape, transplanted).  Every
-measurement is journaled next to the records file, so re-runs and
-overlapping shapes are served from cache.
+``--executor`` picks how those lanes run: ``sim`` (default) keeps the
+bit-identical simulated clock, ``thread`` runs lanes on a thread pool,
+and ``process`` ships each lane to a persistent worker process with a
+per-lane timeout — a backend crash or hang costs one ``inf`` trial, not
+the session.  ``--warm-start`` seeds each search from this workload's
+previous best record (or the nearest previously-tuned shape of the same
+dtype, transplanted).  Every measurement is journaled next to the
+records file, so re-runs and overlapping shapes are served from cache;
+the journal's append handle is closed when tuning ends.
 """
 
 from __future__ import annotations
 
 import argparse
+import contextlib
 
 from repro.configs.registry import get_arch, get_shape
 from repro.core import Budget, GemmWorkload, TrialJournal, TuningRecords, TuningSession
 from repro.core.cost import AnalyticalTPUCost
+from repro.core.executor import EXECUTORS
 
 
 def _pad_dim(x: int) -> int:
@@ -76,6 +83,9 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--workers", type=int, default=1,
                     help="parallel measurement lanes per engine")
+    ap.add_argument("--executor", default="sim", choices=sorted(EXECUTORS),
+                    help="how lanes run: simulated clock (bit-identical), "
+                         "threads, or crash-isolated worker processes")
     ap.add_argument("--warm-start", action="store_true",
                     help="seed each search from the nearest tuned shape")
     ap.add_argument("--journal", default=None,
@@ -98,17 +108,20 @@ def main() -> None:
         journal=journal,
     )
     budget = Budget(max_fraction=args.fraction, max_trials=args.max_trials)
-    report = session.tune_arch(
-        workloads=workloads_for_arch(args.arch, args.shape),
-        tuner_name=args.tuner,
-        budget=budget,
-        n_workers=args.workers,
-        warm_start=args.warm_start,
-    )
+    with journal if journal is not None else contextlib.nullcontext():
+        report = session.tune_arch(
+            workloads=workloads_for_arch(args.arch, args.shape),
+            tuner_name=args.tuner,
+            budget=budget,
+            n_workers=args.workers,
+            warm_start=args.warm_start,
+            executor=args.executor,
+        )
     print(
         f"[tune] wrote {len(records)} records to {args.records} "
-        f"(workers={report.n_workers} "
-        f"cache_hit={report.stats.cache_hit_rate():.2f})"
+        f"(workers={report.n_workers} executor={args.executor} "
+        f"cache_hit={report.stats.cache_hit_rate():.2f} "
+        f"lane_failures={report.stats.n_failures})"
     )
 
 

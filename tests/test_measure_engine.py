@@ -16,6 +16,7 @@ from repro.core import (
     GemmConfigSpace,
     GemmWorkload,
     MeasureEngine,
+    SimulatedExecutor,
     TrialJournal,
     TuningRecords,
     TuningSession,
@@ -69,6 +70,21 @@ def test_gbfs_serial_parity(space):
     assert [t.cost for t in ref.trials] == [t.cost for t in new.trials]
     assert [t.clock_s for t in ref.trials] == [t.clock_s for t in new.trials]
     assert new.best_cost == ref.best_cost
+
+
+def test_simulated_executor_is_bit_identical(space):
+    """An explicitly-passed SimulatedExecutor reproduces the historical
+    serial loop exactly — the executor layer must not perturb the
+    ``n_workers=1`` parity guarantee."""
+    budget = Budget(max_trials=150)
+    ref = _reference_serial_gbfs(space, _make_cost(space), 7, budget)
+    engine = MeasureEngine(_make_cost(space), executor=SimulatedExecutor())
+    new = GBFSTuner(space, _make_cost(space), seed=7).tune(budget, engine=engine)
+    assert [t.state.key() for t in ref.trials] == [t.state.key() for t in new.trials]
+    assert [t.cost for t in ref.trials] == [t.cost for t in new.trials]
+    assert [t.clock_s for t in ref.trials] == [t.clock_s for t in new.trials]
+    assert new.best_cost == ref.best_cost
+    assert new.executor == "sim"
 
 
 def test_gbfs_parallel_same_sequence_never_exceeds_budget(space):
@@ -196,6 +212,54 @@ def test_warm_start_from_nearest_shape(tmp_path):
     assert res.trials[0].state.key() == s0.key()
 
 
+def test_warm_start_scoped_to_dtype(tmp_path):
+    """A bf16-tuned best must never seed a search for another dtype —
+    neither via the records donor scan nor via the journal."""
+    records = TuningRecords(str(tmp_path / "rec.json"))
+    session = TuningSession(
+        records, seed=0, verbose=False, journal=TrialJournal(str(tmp_path / "j.jsonl"))
+    )
+    session.tune_workload(GemmWorkload(64, 64, 64, dtype="bfloat16"), "g-bfs",
+                          Budget(max_trials=150))
+    bf16_twin = GemmWorkload(128, 128, 128, dtype="bfloat16")
+    int8_twin = GemmWorkload(128, 128, 128, dtype="int8")
+    assert session.warm_start_state(
+        bf16_twin, bf16_twin.space(), "analytical_tpu_v5e"
+    ) is not None
+    assert session.warm_start_state(
+        int8_twin, int8_twin.space(), "analytical_tpu_v5e"
+    ) is None
+    # the journal donor path is dtype-scoped too (fingerprint form)
+    fp = AnalyticalTPUCost(bf16_twin.space(), n_repeats=1).measure_fingerprint()
+    assert session.warm_start_state(
+        bf16_twin, bf16_twin.space(), "analytical_tpu_v5e", fingerprint=fp
+    ) is not None
+    assert session.warm_start_state(
+        int8_twin, int8_twin.space(), "analytical_tpu_v5e", fingerprint=fp
+    ) is None
+
+
+def test_tune_arch_trial_pool_is_hard_ceiling(tmp_path):
+    """The shared trial pool can never be overspent, even with more
+    workloads than trials and parallel lanes."""
+    wls = [
+        GemmWorkload(64, 64, 64, label="w0"),
+        GemmWorkload(64, 64, 128, label="w1"),
+        GemmWorkload(64, 128, 64, label="w2"),
+        GemmWorkload(128, 64, 64, label="w3"),
+        GemmWorkload(128, 128, 128, label="w4"),
+    ]
+    for max_trials, n_workers in [(2, 1), (3, 4), (7, 4), (50, 8)]:
+        session = TuningSession(TuningRecords(), seed=0, verbose=False)
+        report = session.tune_arch(
+            workloads=wls, budget=Budget(max_trials=max_trials), n_workers=n_workers
+        )
+        assert report.total_trials <= max_trials, (
+            f"pool overspent: {report.total_trials} > {max_trials} "
+            f"(workers={n_workers})"
+        )
+
+
 def test_tune_cli_workers_and_warm_start(tmp_path):
     """The tune CLI writes records + a trial journal with --workers, and
     a --warm-start re-run is served from the journal cache."""
@@ -212,7 +276,7 @@ def test_tune_cli_workers_and_warm_start(tmp_path):
     try:
         sys.argv = base
         tune_mod.main()
-        sys.argv = base + ["--warm-start"]
+        sys.argv = base + ["--warm-start", "--executor", "thread"]
         tune_mod.main()
     finally:
         sys.argv = argv
