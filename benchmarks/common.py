@@ -35,6 +35,35 @@ def make_cost(space: GemmConfigSpace, seed: int = 0, noise: float = 0.1,
     return AnalyticalTPUCost(space, n_repeats=repeats, noise_sigma=noise, seed=seed)
 
 
+def make_xla_cost(space: GemmConfigSpace, seed: int = 0, repeats: int = 2,
+                  n_build_workers: int = 4, cache_dir=None):
+    """Real timed XLA:CPU oracle with the persistent compiled-program
+    cache — ``n_build_workers`` compiles candidate batches in parallel,
+    ``cache_dir`` lets re-runs/workers skip compilation entirely."""
+    from repro.core.cost.measured import XLATimedCost
+
+    return XLATimedCost(space, n_repeats=repeats, seed=seed,
+                        n_build_workers=n_build_workers, cache_dir=cache_dir)
+
+
+def add_measure_args(ap) -> None:
+    """The measurement-engine CLI block shared by the benchmark mains:
+    lane count/executor (PR 2) plus compile parallelism and the
+    persistent compiled-program cache directory (measured backends)."""
+    from repro.core.executor import EXECUTORS
+
+    ap.add_argument("--workers", type=int, default=1,
+                    help="parallel measurement lanes per engine")
+    ap.add_argument("--executor", default=None, choices=sorted(EXECUTORS),
+                    help="how lanes run: simulated clock, threads, or "
+                         "crash-isolated worker processes")
+    ap.add_argument("--n-build-workers", type=int, default=4,
+                    help="parallel XLA compile threads (measured backends)")
+    ap.add_argument("--compile-cache-dir", default=None,
+                    help="persistent compiled-program cache directory "
+                         "(measured backends)")
+
+
 def true_cost(space: GemmConfigSpace, state) -> float:
     """Noise-free cost of a configuration (for fair final scoring)."""
     return AnalyticalTPUCost(space, n_repeats=1, noise_sigma=0.0).cost(state)

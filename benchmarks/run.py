@@ -6,6 +6,9 @@ CSV per the repo contract, then the full figure protocols:
   fig7   — Fig. 7a/7b: cost-vs-fraction and cost-vs-time @ 1024^3
   fig8   — Fig. 8a/8b: multi-size @0.1% and variance boxplot
   kernel — tuned-vs-heuristic GEMM (analytical model + real XLA:CPU)
+  measure — real-measurement hot-path throughput (BENCH_measure.json:
+            cold vs warm-compile-cache trials/sec, journal replay,
+            process lanes)
   roofline — dry-run roofline table (if dry-run records exist)
 """
 
@@ -20,16 +23,18 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="reduced protocol")
     ap.add_argument(
-        "--only", default=None, choices=["fig7", "fig8", "kernel", "roofline"]
+        "--only", default=None,
+        choices=["fig7", "fig8", "kernel", "measure", "roofline"],
     )
     args = ap.parse_args()
 
-    from . import fig7, fig8, kernel_bench, roofline_report
+    from . import fig7, fig8, kernel_bench, measure_bench, roofline_report
 
     jobs = {
         "fig7": lambda: fig7.main(quick=args.quick),
         "fig8": lambda: fig8.main(quick=args.quick),
         "kernel": lambda: kernel_bench.main(quick=args.quick),
+        "measure": lambda: measure_bench.main(quick=args.quick),
         "roofline": roofline_report.main,
     }
     if args.only:

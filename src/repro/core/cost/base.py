@@ -97,6 +97,15 @@ class CostBackend(abc.ABC):
         same costs as this one."""
         return None
 
+    def compile_stats(self) -> Optional[dict]:
+        """Cumulative build-cache counters for backends that compile
+        programs (``compiles``/``mem_hits``/``disk_hits``/``evictions``/
+        ``compile_s``/``n_timed``), or ``None`` for backends with no
+        build step.  The measurement engine folds per-wave deltas into
+        :class:`~repro.core.measure.MeasureStats` — across a process
+        boundary the worker ships the delta back with each job result."""
+        return None
+
 
 class CountingCost(CostBackend):
     """Wraps another backend, counting measurements and charging a
@@ -159,6 +168,9 @@ class CountingCost(CostBackend):
             self.simulated_clock_s += max(self._lane_s(c) for c in costs)
             out.extend(costs)
         return out
+
+    def compile_stats(self) -> Optional[dict]:
+        return self.inner.compile_stats()
 
     def fraction_explored(self) -> float:
         return self.n_measured / max(1, self.space.size())
@@ -232,6 +244,9 @@ class SleepingCost(CostBackend):
     def measure_fingerprint(self) -> str:
         # sleeping changes lane occupancy, never the measured value
         return self.inner.measure_fingerprint()
+
+    def compile_stats(self) -> Optional[dict]:
+        return self.inner.compile_stats()
 
     def worker_spec(self) -> Optional[tuple[str, dict]]:
         inner_spec = self.inner.worker_spec()

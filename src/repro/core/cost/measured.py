@@ -8,10 +8,31 @@ These backends do the honest equivalent available in this container:
   dynamic-sliced blocks, k innermost with VMEM-style accumulation) and
   times it.  Different tilings genuinely run at different speeds on the
   CPU cache hierarchy, so the search problem is real, just on a different
-  memory system than the TPU target.  ``batch_cost`` compiles a batch's
-  candidates concurrently on a thread pool (XLA compilation releases the
-  GIL) and then times them serially — timing in parallel would contend
-  for cores and corrupt the measurements.
+  memory system than the TPU target.
+
+  Compilation — not timing, not search logic — dominates the trial cost
+  of this backend, so it is engineered out of the hot path at every
+  layer (the TVM line of work treats build/measure throughput as a
+  first-class axis; see "Learning to Optimize Tensor Programs"):
+
+  - an :class:`ExecutableCache` holds compiled programs behind an
+    LRU-bounded in-memory layer and an optional **persistent on-disk
+    layer** (JAX's AOT ``serialize_executable`` facility), content-keyed
+    by ``(space dims, dtype, TilingState.key(), jax/jaxlib version)`` —
+    a re-run, a sibling engine, or a worker process on the same host
+    skips straight past compilation;
+  - ``batch_cost`` compiles a batch's *unique* unbuilt candidates
+    concurrently on a thread pool (XLA compilation releases the GIL) and
+    times each unique configuration exactly once, fanning the result out
+    to duplicates;
+  - the backend is **process-shippable** (``worker_spec()``): process
+    lanes rebuild it from a picklable recipe, each worker keeps its own
+    warm executable cache across jobs, and the warmup+timed region is
+    serialized across lanes by a :class:`_TimingGate` (thread lock
+    in-process, ``flock`` across processes) so parallel lanes never
+    contend for cores *while a measurement is being timed*.  Compiles
+    still overlap — they are two orders of magnitude longer than the
+    timed region, and serializing them would erase the parallel win.
 
 * :class:`PallasInterpretCost` — times the actual Pallas kernel
   (`repro.kernels.gemm`) in ``interpret=True`` mode.  Functionally
@@ -24,16 +45,216 @@ behind the same :class:`CostBackend` protocol (DESIGN.md §2).
 
 from __future__ import annotations
 
+import hashlib
 import math
+import os
+import pickle
+import tempfile
+import threading
 import time
-from functools import partial
+from collections import OrderedDict
+from typing import Optional
 
 import numpy as np
 
 from ..config_space import GemmConfigSpace, TilingState
 from .base import CostBackend
 
-__all__ = ["XLATimedCost", "PallasInterpretCost"]
+__all__ = ["XLATimedCost", "PallasInterpretCost", "ExecutableCache"]
+
+
+class _TimingGate:
+    """Serializes the warmup+timed region of a measurement: a thread lock
+    covers lanes sharing one backend object (ThreadExecutor), an
+    exclusive ``flock`` on ``lock_path`` covers sibling worker processes
+    (ProcessExecutor).  Held only around execution — compilation stays
+    parallel."""
+
+    def __init__(self, lock_path: Optional[str] = None):
+        self.lock_path = lock_path
+        self._tlock = threading.Lock()
+        self._fd: Optional[int] = None
+
+    def _flock(self, exclusive: bool) -> None:
+        try:
+            import fcntl
+        except ImportError:  # non-POSIX: thread lock only
+            return
+        try:
+            if self._fd is None:
+                d = os.path.dirname(os.path.abspath(self.lock_path))
+                os.makedirs(d, exist_ok=True)
+                self._fd = os.open(self.lock_path, os.O_CREAT | os.O_RDWR, 0o644)
+            fcntl.flock(self._fd, fcntl.LOCK_EX if exclusive else fcntl.LOCK_UN)
+        except OSError:
+            pass  # lock file unusable: measure anyway, just unserialized
+
+    def __enter__(self) -> "_TimingGate":
+        self._tlock.acquire()
+        if self.lock_path is not None:
+            self._flock(exclusive=True)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        try:
+            if self.lock_path is not None and self._fd is not None:
+                self._flock(exclusive=False)
+        finally:
+            self._tlock.release()
+
+
+class ExecutableCache:
+    """Two-layer compiled-program cache for :class:`XLATimedCost`.
+
+    * **memory** — an LRU of loaded executables, bounded by ``capacity``
+      so a long ``tune_arch`` run over many shapes cannot grow without
+      limit;
+    * **disk** (optional) — serialized executables under ``cache_dir``
+      via JAX's AOT ``serialize_executable`` facility, content-keyed so
+      one directory safely serves every shape/dtype/version.  Writes are
+      atomic (tmp + rename), so sibling processes can share the
+      directory; a corrupt or version-mismatched entry silently falls
+      back to a fresh compile.
+
+    Counters (``stats()``) feed ``MeasureStats``/``BENCH_measure.json``:
+    ``compiles``, ``mem_hits``, ``disk_hits``, ``evictions``,
+    ``compile_s`` (seconds spent compiling), ``n_timed`` (maintained by
+    the backend: how many timed executions actually ran).
+    """
+
+    def __init__(self, capacity: int = 512, cache_dir: Optional[str] = None):
+        self.capacity = max(1, int(capacity))
+        self.cache_dir = cache_dir
+        self._mem: OrderedDict[str, object] = OrderedDict()
+        self._lock = threading.Lock()
+        self.counters = {
+            "compiles": 0,
+            "mem_hits": 0,
+            "disk_hits": 0,
+            "evictions": 0,
+            "compile_s": 0.0,
+            "n_timed": 0,
+        }
+
+    # -- key/paths -----------------------------------------------------------
+    @staticmethod
+    def content_key(space: GemmConfigSpace, dtype: str, state: TilingState) -> str:
+        """Content key: the compiled program is fully determined by the
+        GEMM dims, dtype, tiling state, and the jax/jaxlib (XLA) version
+        that produced it."""
+        import jax
+        import jaxlib
+
+        raw = (
+            f"m{space.m}k{space.k}n{space.n}/{dtype}/{state.key()}"
+            f"/jax{jax.__version__}/jaxlib{jaxlib.__version__}"
+        )
+        return hashlib.sha256(raw.encode()).hexdigest()[:40]
+
+    def _path(self, ckey: str) -> str:
+        return os.path.join(self.cache_dir, f"{ckey}.xlaexec")
+
+    # -- layers --------------------------------------------------------------
+    def peek(self, ckey: str) -> bool:
+        """Uncounted membership probe of the memory layer (used to skip
+        already-built states without charging a hit event)."""
+        with self._lock:
+            return ckey in self._mem
+
+    def get_mem(self, ckey: str, count: bool = True):
+        with self._lock:
+            fn = self._mem.get(ckey)
+            if fn is not None:
+                self._mem.move_to_end(ckey)
+                if count:
+                    self.counters["mem_hits"] += 1
+            return fn
+
+    def count_mem_hit(self) -> None:
+        with self._lock:
+            self.counters["mem_hits"] += 1
+
+    def put_mem(self, ckey: str, fn) -> None:
+        with self._lock:
+            self._mem[ckey] = fn
+            self._mem.move_to_end(ckey)
+            while len(self._mem) > self.capacity:
+                self._mem.popitem(last=False)
+                self.counters["evictions"] += 1
+
+    def get_disk(self, ckey: str):
+        """Deserialize a previously-persisted executable, or None."""
+        if self.cache_dir is None:
+            return None
+        path = self._path(ckey)
+        if not os.path.exists(path):
+            return None
+        try:
+            from jax.experimental import serialize_executable
+
+            with open(path, "rb") as f:
+                payload, in_tree, out_tree = pickle.load(f)
+            fn = serialize_executable.deserialize_and_load(payload, in_tree, out_tree)
+        except Exception:  # corrupt / version drift: recompile instead
+            return None
+        with self._lock:
+            self.counters["disk_hits"] += 1
+        return fn
+
+    def put_disk(self, ckey: str, compiled) -> None:
+        if self.cache_dir is None:
+            return
+        try:
+            from jax.experimental import serialize_executable
+
+            payload, in_tree, out_tree = serialize_executable.serialize(compiled)
+            os.makedirs(self.cache_dir, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=self.cache_dir, suffix=".tmp")
+            try:
+                with os.fdopen(fd, "wb") as f:
+                    pickle.dump((payload, in_tree, out_tree), f)
+                os.replace(tmp, self._path(ckey))  # atomic publish
+            finally:
+                if os.path.exists(tmp):
+                    os.unlink(tmp)
+        except Exception:
+            pass  # persistence is an optimization, never a failure mode
+
+    def count_compile(self, seconds: float) -> None:
+        with self._lock:
+            self.counters["compiles"] += 1
+            self.counters["compile_s"] += seconds
+
+    def count_timed(self) -> None:
+        with self._lock:
+            self.counters["n_timed"] += 1
+
+    def stats(self) -> dict:
+        with self._lock:
+            return dict(self.counters)
+
+    def __len__(self) -> int:
+        return len(self._mem)
+
+
+def _xla_timed_from_spec(
+    m: int, k: int, n: int, d_m: int, d_k: int, d_n: int,
+    n_repeats: int, dtype: str, vmem_guard_bytes: int, seed: int,
+    n_build_workers: int, cache_dir: Optional[str],
+    cache_capacity: int, timing_lock_path: Optional[str],
+) -> "XLATimedCost":
+    """Worker-process factory (see ``CostBackend.worker_spec``)."""
+    return XLATimedCost(
+        GemmConfigSpace(m, k, n, d_m, d_k, d_n),
+        n_repeats=n_repeats,
+        dtype=dtype,
+        vmem_guard_bytes=vmem_guard_bytes,
+        seed=seed,
+        n_build_workers=n_build_workers,
+        cache_dir=cache_dir,
+        cache_capacity=cache_capacity,
+        timing_lock_path=timing_lock_path,
+    )
 
 
 class XLATimedCost(CostBackend):
@@ -47,6 +268,9 @@ class XLATimedCost(CostBackend):
         vmem_guard_bytes: int = 16 * 1024 * 1024,
         seed: int = 0,
         n_build_workers: int = 4,
+        cache_dir: Optional[str] = None,
+        cache_capacity: int = 512,
+        timing_lock_path: Optional[str] = None,
     ):
         super().__init__(space, n_repeats)
         import jax
@@ -55,6 +279,7 @@ class XLATimedCost(CostBackend):
         self._jax, self._jnp = jax, jnp
         self.dtype = dtype
         self.vmem_guard_bytes = vmem_guard_bytes
+        self.seed = seed
         self.n_build_workers = max(1, n_build_workers)
         rng = np.random.default_rng(seed)
         self._A = jnp.asarray(
@@ -63,9 +288,15 @@ class XLATimedCost(CostBackend):
         self._B = jnp.asarray(
             rng.standard_normal((space.k, space.n)), dtype=dtype
         )
-        self._cache: dict[str, object] = {}
+        self.cache = ExecutableCache(capacity=cache_capacity, cache_dir=cache_dir)
+        if timing_lock_path is None and cache_dir is not None:
+            timing_lock_path = os.path.join(cache_dir, ".timing.lock")
+        self.timing_lock_path = timing_lock_path
+        self._gate = _TimingGate(timing_lock_path)
 
+    # -- build ---------------------------------------------------------------
     def _build(self, s: TilingState):
+        """Lower + AOT-compile the tiled program for ``s`` (cold path)."""
         jax, jnp = self._jax, self._jnp
         lax = jax.lax
         gm, gk, gn = s.grid
@@ -88,7 +319,10 @@ class XLATimedCost(CostBackend):
 
             return lax.fori_loop(0, gm * gk * gn, body, C)
 
-        return jax.jit(fn)
+        t0 = time.perf_counter()
+        compiled = jax.jit(fn).lower(self._A, self._B).compile()
+        self.cache.count_compile(time.perf_counter() - t0)
+        return compiled
 
     def _fits_vmem(self, s: TilingState) -> bool:
         # Honor the TPU VMEM legitimacy constraint so the searched space
@@ -100,26 +334,73 @@ class XLATimedCost(CostBackend):
             <= self.vmem_guard_bytes
         )
 
-    def _build_and_warm(self, s: TilingState):
-        fn = self._build(s)
-        fn(self._A, self._B).block_until_ready()  # compile + warmup
+    def _ensure(self, s: TilingState, count_mem_hit: bool = True):
+        """Resolve the executable for ``s``: in-memory LRU, then the
+        persistent disk layer, then a fresh compile (persisted for the
+        next session/worker).  Disk loads and compiles are warmed with
+        one untimed call before entering the memory layer.
+
+        ``count_mem_hit=False`` suppresses the memory-layer hit counter
+        for resolves whose trial already charged its cache event (the
+        batch path counts exactly one event per unique trial)."""
+        ckey = ExecutableCache.content_key(self.space, self.dtype, s)
+        fn = self.cache.get_mem(ckey, count=count_mem_hit)
+        if fn is not None:
+            return fn
+        fn = self.cache.get_disk(ckey)
+        if fn is None:
+            fn = self._build(s)
+            self.cache.put_disk(ckey, fn)
+        # warmup: never timed, but gated — a warm run on the cores would
+        # contend with a sibling lane's in-flight timed region
+        with self._gate:
+            fn(self._A, self._B).block_until_ready()
+        self.cache.put_mem(ckey, fn)
         return fn
 
+    def _timed_mean(self, fn) -> float:
+        """``n_repeats`` gated timed runs of a resolved executable; the
+        gate keeps sibling lanes (threads sharing this backend, worker
+        processes sharing the lock file) off the cores while a
+        measurement is on the clock."""
+        total = 0.0
+        for _ in range(self.n_repeats):
+            with self._gate:
+                t0 = time.perf_counter()
+                fn(self._A, self._B).block_until_ready()
+                total += time.perf_counter() - t0
+            self.cache.count_timed()
+        return total / self.n_repeats
+
+    def cost(self, s: TilingState) -> float:
+        # resolve once per *trial* (not per repeat): the cache counters
+        # feed compile_cache_hit_rate, which must mean "fraction of
+        # trials served without a fresh compile"
+        if not self.space.is_legitimate(s) or not self._fits_vmem(s):
+            return math.inf
+        return self._timed_mean(self._ensure(s))
+
     def cost_once(self, s: TilingState, repeat_idx: int) -> float:
+        # kept for the CostBackend protocol; cost() bypasses it so the
+        # executable resolve (and its counters) happen once per trial
         if not self._fits_vmem(s):
             return math.inf
-        key = s.key()
-        fn = self._cache.get(key)
-        if fn is None:
-            fn = self._build_and_warm(s)
-            self._cache[key] = fn
-        t0 = time.perf_counter()
-        fn(self._A, self._B).block_until_ready()
-        return time.perf_counter() - t0
+        fn = self._ensure(s)
+        with self._gate:
+            t0 = time.perf_counter()
+            fn(self._A, self._B).block_until_ready()
+            dt = time.perf_counter() - t0
+        self.cache.count_timed()
+        return dt
 
     def batch_cost(self, states) -> list[float]:
-        """Compile the batch's unbuilt candidates on a thread pool, then
-        time each serially (parallel timing would contend for cores)."""
+        """Compile the batch's *unique* unbuilt candidates on a thread
+        pool (XLA compilation releases the GIL), then time each unique
+        configuration once — serially, so timing never contends for
+        cores — and fan results out to duplicates.  Exactly one cache
+        event is counted per unique measurable state: a mem hit for
+        already-built ones, a disk hit or compile for the rest (charged
+        inside the prefetch)."""
         from concurrent.futures import ThreadPoolExecutor
 
         states = list(states)
@@ -127,20 +408,81 @@ class XLATimedCost(CostBackend):
         for s in states:
             key = s.key()
             if (
-                key not in self._cache
-                and key not in seen
+                key not in seen
                 and self.space.is_legitimate(s)
                 and self._fits_vmem(s)
             ):
-                todo.append(s)
                 seen.add(key)
+                ckey = ExecutableCache.content_key(self.space, self.dtype, s)
+                if self.cache.peek(ckey):
+                    self.cache.count_mem_hit()  # warm trial: one event
+                else:
+                    todo.append(s)
         if len(todo) > 1:
             workers = min(self.n_build_workers, len(todo))
             with ThreadPoolExecutor(max_workers=workers) as ex:
-                futures = [(s.key(), ex.submit(self._build_and_warm, s)) for s in todo]
-                for key, fut in futures:
-                    self._cache[key] = fut.result()
-        return [self.cost(s) for s in states]
+                # the prefetch charges the trial's disk-hit/compile event
+                for fut in [ex.submit(self._ensure, s, False) for s in todo]:
+                    fut.result()
+            todo = []
+        by_key: dict[str, float] = {}
+        out: list[float] = []
+        single = {s.key() for s in todo}  # <2 misses: cost() charges it
+        for s in states:
+            key = s.key()
+            if key not in by_key:
+                if not self.space.is_legitimate(s) or not self._fits_vmem(s):
+                    by_key[key] = math.inf
+                elif key in single:
+                    by_key[key] = self.cost(s)
+                else:
+                    by_key[key] = self._timed_mean(
+                        self._ensure(s, count_mem_hit=False)
+                    )
+            out.append(by_key[key])
+        return out
+
+    # -- CostBackend protocol ------------------------------------------------
+    def measure_fingerprint(self) -> str:
+        # seed fixes the operand contents; dtype changes the program
+        return f"r{self.n_repeats}|{self.dtype}|seed{self.seed}"
+
+    def compile_stats(self) -> Optional[dict]:
+        return self.cache.stats()
+
+    def worker_spec(self):
+        if self.space.extra_constraint is not None:
+            # arbitrary closures don't survive the spec round-trip;
+            # refuse to ship rather than search a subtly different space
+            return None
+        lock = self.timing_lock_path
+        if lock is None:
+            # all workers rebuilt from this spec must share one gate so
+            # their timed regions serialize; derive a stable path from
+            # the measurement identity
+            digest = hashlib.sha256(
+                f"{self.space.m}x{self.space.k}x{self.space.n}"
+                f"/{self.dtype}/s{self.seed}/{os.getpid()}".encode()
+            ).hexdigest()[:16]
+            lock = os.path.join(
+                tempfile.gettempdir(), f"repro-xla-timing-{digest}.lock"
+            )
+        sp = self.space
+        return (
+            "repro.core.cost.measured:_xla_timed_from_spec",
+            {
+                "m": sp.m, "k": sp.k, "n": sp.n,
+                "d_m": sp.d_m, "d_k": sp.d_k, "d_n": sp.d_n,
+                "n_repeats": self.n_repeats,
+                "dtype": self.dtype,
+                "vmem_guard_bytes": self.vmem_guard_bytes,
+                "seed": self.seed,
+                "n_build_workers": self.n_build_workers,
+                "cache_dir": self.cache.cache_dir,
+                "cache_capacity": self.cache.capacity,
+                "timing_lock_path": lock,
+            },
+        )
 
 
 class PallasInterpretCost(CostBackend):

@@ -71,6 +71,10 @@ class LaneResult:
     cost: float
     wall_s: float = 0.0  # measured lane wall time (0 under simulation)
     error: Optional[str] = None  # crash / timeout / raised-exception note
+    #: build-cache counter delta this job incurred worker-side (process
+    #: lanes only — in-process executors let the engine read the backend
+    #: directly); see ``CostBackend.compile_stats``.
+    compile: Optional[dict] = None
 
 
 class LaneExecutor(abc.ABC):
@@ -178,9 +182,12 @@ class ThreadExecutor(LaneExecutor):
 
 def _worker_main(conn) -> None:
     """Measurement worker loop: rebuild backends from specs (cached per
-    spec), measure one state per job, report ``("ok", cost, wall)`` or
-    ``("err", message)``.  Runs until the sentinel ``None`` or parent
-    death."""
+    spec — so a backend's warm executable cache survives across jobs),
+    measure one state per job, report ``("ok", cost, wall, compile_delta)``
+    or ``("err", message)``.  ``compile_delta`` is the job's increment of
+    ``backend.compile_stats()`` (None for backends without a build step)
+    so the engine can attribute compile-cache hits across the process
+    boundary.  Runs until the sentinel ``None`` or parent death."""
     backends: dict = {}
     while True:
         try:
@@ -193,19 +200,41 @@ def _worker_main(conn) -> None:
             conn.send("pong")
             continue
         spec, state_lists = job
+        backend, before = None, None
         try:
             key = repr(spec)
             backend = backends.get(key)
             if backend is None:
                 backend = backends[key] = backend_from_spec(spec)
+            before = backend.compile_stats()
             t0 = time.perf_counter()
             cost = backend.cost(TilingState.from_lists(state_lists))
-            conn.send(("ok", cost, time.perf_counter() - t0))
+            wall = time.perf_counter() - t0
+            conn.send(("ok", cost, wall, _compile_delta(backend, before)))
         except BaseException as e:  # noqa: BLE001 — the worker must survive
             try:
-                conn.send(("err", f"{type(e).__name__}: {e}"))
+                # compile work paid before the failure still gets
+                # attributed (a raised measurement is not free)
+                conn.send(
+                    ("err", f"{type(e).__name__}: {e}",
+                     _compile_delta(backend, before))
+                )
             except (BrokenPipeError, OSError):
                 return
+
+
+def _compile_delta(backend, before) -> Optional[dict]:
+    """Increment of ``backend.compile_stats()`` since ``before`` (None
+    for backends without a build step or when stats are unreadable)."""
+    if backend is None or before is None:
+        return None
+    try:
+        after = backend.compile_stats()
+        if after is None:
+            return None
+        return {k: after[k] - before.get(k, 0) for k in after}
+    except Exception:  # noqa: BLE001 — attribution must never kill a job
+        return None
 
 
 class _Worker:
@@ -348,13 +377,20 @@ class ProcessExecutor(LaneExecutor):
                 )
                 continue
             if msg[0] == "ok":
-                results.append(LaneResult(cost=msg[1], wall_s=msg[2]))
+                results.append(
+                    LaneResult(
+                        cost=msg[1],
+                        wall_s=msg[2],
+                        compile=msg[3] if len(msg) > 3 else None,
+                    )
+                )
             else:
                 results.append(
                     LaneResult(
                         cost=math.inf,
                         wall_s=time.perf_counter() - sent_t[i],
                         error=msg[1],
+                        compile=msg[2] if len(msg) > 2 else None,
                     )
                 )
         return results

@@ -23,8 +23,14 @@ and by never re-measuring a configuration they have already seen.
     session* for the same workload are served in ~zero lane time
     (a cache hit still counts as a search trial, it is just free on the
     clock);
-  * **stats** — dispatch/hit counters (shareable across engines via
-    :class:`MeasureStats`) so benchmarks can attribute speedups.
+  * **auto-reload** — with ``reload_every=N``, every N waves the engine
+    merges journal rows appended by *sibling* engines/processes sharing
+    the journal file, so concurrent searches serve each other's fresh
+    measurements mid-search instead of re-measuring;
+  * **stats** — dispatch/hit counters plus build-cache counters
+    (compiles vs LRU/disk hits, see ``CostBackend.compile_stats``),
+    shareable across engines via :class:`MeasureStats`, so benchmarks
+    can attribute speedups.
 
 ``TuningContext.measure_many`` slices candidate batches into waves,
 charges the budget per trial and the clock per wave, and keeps the
@@ -67,6 +73,16 @@ class MeasureStats:
     lane_busy_s: float = 0.0  # sum of per-lane occupancy
     span_s: float = 0.0  # sum of wave critical paths (what the clock pays)
     n_failures: int = 0  # lanes that crashed / timed out / raised
+    # -- build-cache counters (backends with a compile step, see
+    # CostBackend.compile_stats; zero for analytical backends) ---------------
+    n_compiles: int = 0  # fresh XLA compiles paid
+    n_compile_mem_hits: int = 0  # served by the in-memory LRU
+    n_compile_disk_hits: int = 0  # served by the persistent on-disk layer
+    n_compile_evictions: int = 0  # LRU evictions (memory bound working)
+    compile_s: float = 0.0  # wall seconds spent compiling
+    # -- journal auto-reload (mid-search sibling merging) --------------------
+    n_journal_reloads: int = 0
+    n_journal_rows_merged: int = 0  # sibling rows ingested mid-search
 
     @property
     def n_measured(self) -> int:
@@ -74,6 +90,21 @@ class MeasureStats:
 
     def cache_hit_rate(self) -> float:
         return self.n_cache_hits / max(1, self.n_measured)
+
+    def compile_cache_hit_rate(self) -> float:
+        """Fraction of executable lookups served without a fresh compile
+        (in-memory LRU or the persistent disk layer)."""
+        hits = self.n_compile_mem_hits + self.n_compile_disk_hits
+        return hits / max(1, hits + self.n_compiles)
+
+    def add_compile_delta(self, delta: dict) -> None:
+        """Fold one ``compile_stats`` increment (engine-side snapshot
+        diff, or a worker-shipped per-job delta) into the totals."""
+        self.n_compiles += int(delta.get("compiles", 0))
+        self.n_compile_mem_hits += int(delta.get("mem_hits", 0))
+        self.n_compile_disk_hits += int(delta.get("disk_hits", 0))
+        self.n_compile_evictions += int(delta.get("evictions", 0))
+        self.compile_s += float(delta.get("compile_s", 0.0))
 
 
 class MeasureEngine:
@@ -90,6 +121,7 @@ class MeasureEngine:
         timeout_s: float = 4.0,
         stats: Optional[MeasureStats] = None,
         executor: Optional[LaneExecutor] = None,
+        reload_every: int = 0,
     ):
         self.backend = backend
         self.n_workers = max(1, int(n_workers))
@@ -113,6 +145,12 @@ class MeasureEngine:
         self.overhead_s = overhead_s
         self.timeout_s = timeout_s
         self.stats = stats or MeasureStats()
+        # auto-reload cadence: every ``reload_every`` waves the journal
+        # merges rows appended by sibling engines/processes, so
+        # concurrent searches serve each other's fresh measurements
+        # mid-search instead of re-measuring (0 disables)
+        self.reload_every = max(0, int(reload_every))
+        self._waves_since_reload = 0
 
     # -- clock model ---------------------------------------------------------
     def lane_time(self, cost: float) -> float:
@@ -132,6 +170,15 @@ class MeasureEngine:
         sessions (or other workloads sharing the journal) hit the cache.
         """
         assert len(states) <= self.n_workers, "wave larger than lane count"
+        if self.journal is not None and self.reload_every:
+            self._waves_since_reload += 1
+            if self._waves_since_reload >= self.reload_every:
+                # merge rows appended by sibling engines/processes since
+                # the last read, *before* the cache lookup below — a
+                # sibling's fresh measurement serves this wave for free
+                self._waves_since_reload = 0
+                self.stats.n_journal_reloads += 1
+                self.stats.n_journal_rows_merged += self.journal.reload()
         outcomes: list[Optional[MeasureOutcome]] = [None] * len(states)
         miss_idx: list[int] = []
         for i, s in enumerate(states):
@@ -148,7 +195,20 @@ class MeasureEngine:
             # config charges at most that much search clock); the real
             # executors own their kill timeout separately — conflating the
             # two would kill legitimately slow measurements (XLA compiles)
+            compile_before = self.backend.compile_stats()
             lanes = self.executor.run_wave(self.backend, misses)
+            lane_deltas = [l.compile for l in lanes if l.compile]
+            if lane_deltas:
+                # process lanes: each job shipped its worker-side delta
+                for d in lane_deltas:
+                    self.stats.add_compile_delta(d)
+            elif compile_before is not None:
+                # in-process executors share this backend object: the
+                # wave's increment is the snapshot difference
+                after = self.backend.compile_stats()
+                self.stats.add_compile_delta(
+                    {k: after[k] - compile_before.get(k, 0) for k in after}
+                )
             for i, s, lane in zip(miss_idx, misses, lanes):
                 lane_s = (
                     lane.wall_s if self.executor.real_time else self.lane_time(lane.cost)

@@ -35,9 +35,19 @@ __all__ = [
     "TrialJournal",
     "workload_key",
     "parse_workload_key",
+    "compile_cache_dir_for",
     "global_records",
     "set_global_records",
 ]
+
+
+def compile_cache_dir_for(journal_path: str) -> str:
+    """Default location of the persistent compiled-program cache for
+    measured backends (``XLATimedCost``): a directory next to the
+    :class:`TrialJournal`, so the two cross-session caches — measured
+    costs and compiled executables — travel together and sibling
+    engines/hosts sharing the journal path share the executables too."""
+    return journal_path + ".xlacache"
 
 
 def workload_key(m: int, k: int, n: int, dtype: str = "bfloat16",

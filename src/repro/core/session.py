@@ -180,6 +180,7 @@ class TuningSession:
         engine: Optional[MeasureEngine] = None,
         stats: Optional[MeasureStats] = None,
         executor: Optional[LaneExecutor] = None,
+        reload_every: int = 0,
     ) -> TuneResult:
         space = wl.space()
         cost = self.cost_factory(space)
@@ -198,6 +199,7 @@ class TuningSession:
                 workload_key=wkey,
                 stats=stats,
                 executor=executor,
+                reload_every=reload_every,
             )
         budget = budget or Budget(max_fraction=0.001)
         tuner_cls = TUNERS[tuner_name]
@@ -244,6 +246,7 @@ class TuningSession:
         workloads: Optional[Sequence[GemmWorkload]] = None,
         tuner_kwargs: Optional[dict] = None,
         executor: Optional[LaneExecutor | str] = None,
+        reload_every: int = 0,
     ) -> ArchTuneReport:
         """Tune every distinct GEMM an architecture executes through one
         shared engine configuration and one shared budget pool.
@@ -263,6 +266,10 @@ class TuningSession:
         (``"sim"``/``"thread"``/``"process"``) which is built here and
         closed when the arch finishes.  All workloads share the one
         executor, so process lanes pay worker start-up once.
+
+        ``reload_every=N`` makes every workload engine merge sibling
+        journal rows every N waves (mid-search cache sharing between
+        concurrent engines on a common journal file; 0 disables).
         """
         if workloads is None:
             if arch is None:
@@ -308,6 +315,7 @@ class TuningSession:
                     warm_start=warm_start,
                     stats=stats,
                     executor=exec_obj,
+                    reload_every=reload_every,
                 )
                 if left_trials is not None:
                     left_trials -= res.n_trials

@@ -22,6 +22,15 @@ previous best record (or the nearest previously-tuned shape of the same
 dtype, transplanted).  Every measurement is journaled next to the
 records file, so re-runs and overlapping shapes are served from cache;
 the journal's append handle is closed when tuning ends.
+
+``--cost xla`` swaps the analytical oracle for :class:`XLATimedCost` —
+real timed XLA:CPU programs.  Its compile cost is kept off the hot path:
+``--n-build-workers`` compiles candidate batches in parallel, and a
+persistent compiled-program cache (``--compile-cache-dir``, default next
+to the journal) lets re-runs and process-lane workers skip compilation
+entirely.  ``--reload-every N`` merges sibling engines' journal rows
+every N waves, so concurrent tuning runs sharing one journal file serve
+each other's fresh measurements mid-search.
 """
 
 from __future__ import annotations
@@ -31,8 +40,9 @@ import contextlib
 
 from repro.configs.registry import get_arch, get_shape
 from repro.core import Budget, GemmWorkload, TrialJournal, TuningRecords, TuningSession
-from repro.core.cost import AnalyticalTPUCost
+from repro.core.cost import AnalyticalTPUCost, XLATimedCost
 from repro.core.executor import EXECUTORS
+from repro.core.records import compile_cache_dir_for
 
 
 def _pad_dim(x: int) -> int:
@@ -91,6 +101,20 @@ def main() -> None:
     ap.add_argument("--journal", default=None,
                     help="trial-journal path (default: <records>.journal.jsonl; "
                          "'none' disables the persistent cache)")
+    ap.add_argument("--cost", default="analytical", choices=["analytical", "xla"],
+                    help="cost oracle: the analytical TPU model, or real "
+                         "timed XLA:CPU programs (XLATimedCost)")
+    ap.add_argument("--n-build-workers", type=int, default=4,
+                    help="parallel XLA compile threads per backend "
+                         "(--cost xla only)")
+    ap.add_argument("--compile-cache-dir", default=None,
+                    help="persistent compiled-program cache directory "
+                         "(--cost xla; default: <journal>.xlacache; "
+                         "'none' disables the on-disk layer)")
+    ap.add_argument("--reload-every", type=int, default=0,
+                    help="merge sibling engines' journal rows every N "
+                         "measurement waves (mid-search cache sharing "
+                         "between concurrent runs; 0 disables)")
     args = ap.parse_args()
 
     journal_path = args.journal
@@ -98,12 +122,37 @@ def main() -> None:
         journal_path = args.records + ".journal.jsonl"
     journal = None if journal_path == "none" else TrialJournal(journal_path)
 
+    if args.cost == "xla":
+        cache_dir = args.compile_cache_dir
+        if cache_dir is None:
+            cache_dir = (
+                compile_cache_dir_for(journal_path)
+                if journal_path != "none"
+                else None
+            )
+        elif cache_dir == "none":
+            cache_dir = None
+
+        def cost_factory(space):
+            # float32: the honest CPU-timed stand-in (CPU has no native
+            # bf16 pipeline worth timing); seed fixes operand contents
+            return XLATimedCost(
+                space,
+                n_repeats=3,
+                seed=args.seed,
+                n_build_workers=args.n_build_workers,
+                cache_dir=cache_dir,
+            )
+    else:
+        def cost_factory(space):
+            return AnalyticalTPUCost(
+                space, n_repeats=3, noise_sigma=args.noise, seed=args.seed
+            )
+
     records = TuningRecords(args.records)
     session = TuningSession(
         records,
-        cost_factory=lambda space: AnalyticalTPUCost(
-            space, n_repeats=3, noise_sigma=args.noise, seed=args.seed
-        ),
+        cost_factory=cost_factory,
         seed=args.seed,
         journal=journal,
     )
@@ -116,11 +165,14 @@ def main() -> None:
             n_workers=args.workers,
             warm_start=args.warm_start,
             executor=args.executor,
+            reload_every=args.reload_every,
         )
     print(
         f"[tune] wrote {len(records)} records to {args.records} "
         f"(workers={report.n_workers} executor={args.executor} "
         f"cache_hit={report.stats.cache_hit_rate():.2f} "
+        f"compile_cache_hit={report.stats.compile_cache_hit_rate():.2f} "
+        f"compiles={report.stats.n_compiles} "
         f"lane_failures={report.stats.n_failures})"
     )
 

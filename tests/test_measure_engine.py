@@ -181,6 +181,87 @@ def test_engine_arg_conflicts_rejected(space):
         )
 
 
+def test_auto_reload_serves_sibling_rows_mid_search(tmp_path, space):
+    """With reload_every=N, an engine periodically merges rows appended
+    by a *sibling* engine/process sharing the journal file, and serves
+    them as cache hits instead of re-measuring (the ROADMAP's
+    multi-engine mid-search sharing)."""
+    jpath = str(tmp_path / "shared.jsonl")
+    wkey = workload_key(space.m, space.k, space.n, "bfloat16", "analytical_tpu_v5e")
+    cost = AnalyticalTPUCost(space)
+    jkey = f"{wkey}?{cost.measure_fingerprint()}"
+    s0 = space.initial_state()
+    s_sib = space.neighbors(s0)[0]
+
+    journal_a = TrialJournal(jpath)
+    journal_b = TrialJournal(jpath)  # the "sibling engine's" handle
+    eng = MeasureEngine(cost, n_workers=2, journal=journal_a,
+                        workload_key=wkey, reload_every=2)
+    eng.measure_wave([s0])  # wave 1: miss, dispatched
+    assert eng.stats.n_dispatched == 1
+    # a sibling measures s_sib and appends it to the shared file
+    journal_b.record(jkey, s_sib, cost.cost(s_sib))
+    # wave 2 triggers the auto-reload: the sibling's row is a cache hit
+    out = eng.measure_wave([s_sib])
+    assert out[0].cache_hit and out[0].lane_s == 0.0
+    assert eng.stats.n_dispatched == 1  # never re-measured
+    assert eng.stats.n_journal_reloads == 1
+    assert eng.stats.n_journal_rows_merged >= 1
+    journal_a.close()
+    journal_b.close()
+
+
+def test_auto_reload_disabled_by_default(tmp_path, space):
+    jpath = str(tmp_path / "j.jsonl")
+    wkey = workload_key(space.m, space.k, space.n, "bfloat16", "analytical_tpu_v5e")
+    eng = MeasureEngine(AnalyticalTPUCost(space), n_workers=2,
+                        journal=TrialJournal(jpath), workload_key=wkey)
+    for s in itertools.islice(space.enumerate(), 4):
+        eng.measure_wave([s])
+    assert eng.stats.n_journal_reloads == 0
+
+
+class _FakeCompilingCost(AnalyticalTPUCost):
+    """Analytical values plus a synthetic build-cache counter, so engine
+    aggregation is testable without paying real XLA compiles."""
+
+    def __init__(self, space):
+        super().__init__(space)
+        self._counters = {"compiles": 0, "mem_hits": 0, "disk_hits": 0,
+                          "evictions": 0, "compile_s": 0.0, "n_timed": 0}
+        self._seen: set[str] = set()
+
+    def cost(self, s):
+        key = s.key()
+        if key in self._seen:
+            self._counters["mem_hits"] += 1
+        else:
+            self._seen.add(key)
+            self._counters["compiles"] += 1
+            self._counters["compile_s"] += 0.25
+        self._counters["n_timed"] += 1
+        return super().cost(s)
+
+    def batch_cost(self, states):
+        return [self.cost(s) for s in states]
+
+    def compile_stats(self):
+        return dict(self._counters)
+
+
+def test_engine_folds_compile_stats_into_measure_stats(space):
+    cost = _FakeCompilingCost(space)
+    eng = MeasureEngine(cost, n_workers=2)
+    s0 = space.initial_state()
+    s1 = space.neighbors(s0)[0]
+    eng.measure_wave([s0, s1])
+    eng.measure_wave([s0, s1])  # journal-less: dispatched again, but "cached"
+    assert eng.stats.n_compiles == 2
+    assert eng.stats.n_compile_mem_hits == 2
+    assert eng.stats.compile_s == pytest.approx(0.5)
+    assert eng.stats.compile_cache_hit_rate() == 0.5
+
+
 def test_journal_caches_failed_builds(tmp_path):
     space = GemmConfigSpace(4096, 4096, 4096)
     cost = AnalyticalTPUCost(space)
