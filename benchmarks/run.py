@@ -1,4 +1,5 @@
-"""Benchmark harness entry point — one function per paper table/figure.
+"""Benchmark harness entry point — one function per paper table/figure,
+plus the bench-history diff gate.
 
 ``python -m benchmarks.run [--quick]`` prints ``name,us_per_call,derived``
 CSV per the repo contract, then the full figure protocols:
@@ -10,13 +11,76 @@ CSV per the repo contract, then the full figure protocols:
             cold vs warm-compile-cache trials/sec, journal replay,
             process lanes)
   roofline — dry-run roofline table (if dry-run records exist)
+
+``python -m benchmarks.run --diff`` compares the working-tree
+``BENCH_measure.json`` (the one the bench just wrote) against the
+previously *committed* one (``git show HEAD:BENCH_measure.json``, or
+``--diff-base <ref-or-file>``) and exits non-zero when warm trials/sec
+regressed by more than ``--diff-threshold`` (default 20%) — the CI
+smoke gate that turns the per-PR artifact into a tracked history.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import subprocess
 import sys
 import time
+
+BENCH_MEASURE = "BENCH_measure.json"
+
+
+def _load_baseline(base: str) -> dict:
+    """Baseline BENCH_measure.json: a file path, or a git ref whose
+    committed copy is read via ``git show``."""
+    if os.path.exists(base) and not os.path.isdir(base):
+        with open(base) as f:
+            return json.load(f)
+    blob = subprocess.run(
+        ["git", "show", f"{base}:{BENCH_MEASURE}"],
+        capture_output=True, text=True, check=True,
+        cwd=os.path.dirname(os.path.abspath(__file__)),
+    ).stdout
+    return json.loads(blob)
+
+
+def _warm_tps(bench: dict) -> float:
+    return float(bench["executors"]["sim"]["warm"]["trials_per_s"])
+
+
+def diff_measure(
+    current: str = BENCH_MEASURE,
+    base: str = "HEAD",
+    threshold: float = 0.20,
+) -> int:
+    """Fail (return 1) when warm-cache trials/sec regressed more than
+    ``threshold`` vs the committed baseline.  A missing baseline (first
+    PR to record the bench, or a fresh clone) passes with a note —
+    history has to start somewhere."""
+    with open(current) as f:
+        cur = json.load(f)
+    try:
+        prev = _load_baseline(base)
+    except (subprocess.CalledProcessError, FileNotFoundError, json.JSONDecodeError):
+        print(f"measure-diff,baseline_missing,{base}")
+        return 0
+    cur_tps, prev_tps = _warm_tps(cur), _warm_tps(prev)
+    regression = 1.0 - cur_tps / prev_tps if prev_tps > 0 else 0.0
+    print(f"measure-diff,baseline_warm_trials_per_s,{prev_tps}")
+    print(f"measure-diff,current_warm_trials_per_s,{cur_tps}")
+    print(f"measure-diff,regression_frac,{regression:+.3f}")
+    if regression > threshold:
+        print(
+            f"measure-diff,FAIL,warm trials/sec regressed "
+            f"{regression:.1%} > {threshold:.0%} "
+            f"({prev_tps} -> {cur_tps})",
+            file=sys.stderr,
+        )
+        return 1
+    print(f"measure-diff,OK,within {threshold:.0%}")
+    return 0
 
 
 def main() -> None:
@@ -26,7 +90,21 @@ def main() -> None:
         "--only", default=None,
         choices=["fig7", "fig8", "kernel", "measure", "roofline"],
     )
+    ap.add_argument("--diff", action="store_true",
+                    help="diff BENCH_measure.json against the committed "
+                         "baseline and exit (no benchmarks are run)")
+    ap.add_argument("--diff-base", default="HEAD",
+                    help="baseline for --diff: a git ref (committed "
+                         "BENCH_measure.json) or a JSON file path")
+    ap.add_argument("--diff-threshold", type=float, default=0.20,
+                    help="max tolerated warm trials/sec regression "
+                         "fraction before --diff fails (default 0.20)")
     args = ap.parse_args()
+
+    if args.diff:
+        sys.exit(
+            diff_measure(base=args.diff_base, threshold=args.diff_threshold)
+        )
 
     from . import fig7, fig8, kernel_bench, measure_bench, roofline_report
 

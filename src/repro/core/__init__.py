@@ -1,15 +1,26 @@
-"""repro.core — the paper's contribution: GEMM tiling autotuning.
+"""repro.core — the paper's contribution, generalized: operator-level
+schedule autotuning.
 
 Public surface:
-  GemmConfigSpace / TilingState / Action   — the MDP (paper Sec. 4.1)
+  SearchSpace / State / Action             — the op-agnostic MDP protocol
+  GemmConfigSpace / TilingState            — the canonical (GEMM) instance
+  FlashAttnConfigSpace / FlashScheduleState— the first non-GEMM instance
+  ops.*  (OpSpec / get_op / OPS)           — the operator registry
   cost.*                                   — pluggable cost oracles
   tuners.*                                 — G-BFS, N-A2C + baselines
-  TuningSession / GemmWorkload             — orchestration
+  TuningSession / Workload (GemmWorkload)  — orchestration
   TuningRecords                            — persisted best configs
 """
 
 from .config_space import Action, GemmConfigSpace, TilingState
-from .cost import AnalyticalTPUCost, CostBackend, CountingCost, SleepingCost, TpuSpec
+from .cost import (
+    AnalyticalTPUCost,
+    CostBackend,
+    CountingCost,
+    FlashAnalyticalCost,
+    SleepingCost,
+    TpuSpec,
+)
 from .executor import (
     EXECUTORS,
     LaneExecutor,
@@ -19,16 +30,21 @@ from .executor import (
     ThreadExecutor,
     make_executor,
 )
+from .flash_space import FlashAttnConfigSpace, FlashScheduleState
 from .measure import MeasureEngine, MeasureOutcome, MeasureStats
+from .ops import OPS, OpSpec, get_op, op_names, register_op
 from .records import (
     TrialJournal,
     TuningRecords,
     global_records,
     parse_workload_key,
+    parse_workload_key_generic,
     set_global_records,
     workload_key,
+    workload_key_for,
 )
-from .session import ArchTuneReport, GemmWorkload, TuningSession
+from .session import ArchTuneReport, GemmWorkload, TuningSession, Workload
+from .space import FactoredSearchSpace, SearchSpace, State
 from .tuners import (
     TUNERS,
     Budget,
@@ -44,7 +60,18 @@ __all__ = [
     "Action",
     "GemmConfigSpace",
     "TilingState",
+    "FlashAttnConfigSpace",
+    "FlashScheduleState",
+    "SearchSpace",
+    "FactoredSearchSpace",
+    "State",
+    "OPS",
+    "OpSpec",
+    "get_op",
+    "op_names",
+    "register_op",
     "AnalyticalTPUCost",
+    "FlashAnalyticalCost",
     "CostBackend",
     "CountingCost",
     "SleepingCost",
@@ -63,10 +90,13 @@ __all__ = [
     "TuningRecords",
     "global_records",
     "parse_workload_key",
+    "parse_workload_key_generic",
     "set_global_records",
     "workload_key",
+    "workload_key_for",
     "ArchTuneReport",
     "GemmWorkload",
+    "Workload",
     "TuningSession",
     "TUNERS",
     "Budget",

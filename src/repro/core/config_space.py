@@ -1,4 +1,5 @@
-"""GEMM tiling configuration space — the paper's MDP (Sec. 3.3 / 4.1).
+"""GEMM tiling configuration space — the paper's MDP (Sec. 3.3 / 4.1),
+the canonical :class:`~repro.core.space.SearchSpace` implementation.
 
 A *state* (Eqn. 5) is ``s = [s_m, s_k, s_n, J]`` where ``s_x`` is an
 ordered factor list whose product equals the matrix dimension and ``J``
@@ -9,6 +10,10 @@ halves another within the same dimension:
 
 which preserves the product — the paper's central structural insight is
 that the cost surface is smooth under these product-preserving moves.
+The row-generic machinery (actions, stepping, enumeration, sampling,
+transplanting) lives in :class:`~repro.core.space.FactoredSearchSpace`;
+this module fixes the three ``m/k/n`` rows, the GEMM featurization, and
+the TPU working-set model.
 
 For power-of-two dims (the paper's benchmarks: 512^3, 1024^3, 2048^3) the
 reachable space is exactly the set of ordered power-of-two compositions;
@@ -27,12 +32,18 @@ n; ``s_k=[k0,k1]`` → grid ``k0``, VMEM depth ``bk=k1``).
 from __future__ import annotations
 
 import dataclasses
-import itertools
 import math
-import random as _random
-from typing import Callable, Iterator, Optional, Sequence
+from typing import Callable, Optional, Sequence
 
 import numpy as np
+
+from .space import (
+    Action,
+    FactoredSearchSpace,
+    compositions_pow2,
+    count_compositions_pow2,
+    register_state_type,
+)
 
 __all__ = [
     "TilingState",
@@ -110,59 +121,12 @@ class TilingState:
         return f"[{list(self.m)} x {list(self.k)} x {list(self.n)}]"
 
 
-@dataclasses.dataclass(frozen=True)
-class Action:
-    """Double ``s_x[i]``, halve ``s_x[j]`` (paper Eqn. 6)."""
-
-    dim: int  # 0=m, 1=k, 2=n
-    i: int
-    j: int
-
-    def __str__(self) -> str:  # pragma: no cover - cosmetic
-        return f"({'mkn'[self.dim]}: x2@{self.i}, /2@{self.j})"
-
-
-def count_compositions_pow2(value: int, parts: int) -> int:
-    """Number of ordered factorizations of ``value`` into ``parts`` factors
-    reachable under the doubling/halving moves (= power-of-two compositions
-    times the fixed placement of the odd part, which rides along factor
-    moves two-at-a-time).  For ``value = odd * 2^e`` this is the number of
-    ways to distribute ``e`` twos into ``parts`` ordered slots, times the
-    number of slots the odd part can occupy — except the odd part is only
-    movable in factors of 2, i.e. it cannot move at all; it stays where the
-    initial state put it.  Hence ``C(e + parts - 1, parts - 1)``.
-    """
-    e = (value & -value).bit_length() - 1  # exponent of 2 in value
-    return math.comb(e + parts - 1, parts - 1)
-
-
-def compositions_pow2(value: int, parts: int) -> Iterator[tuple[int, ...]]:
-    """Enumerate ordered factor tuples ``(f_0..f_{parts-1})`` with
-    ``prod == value`` where all variation is in powers of two and the odd
-    part of ``value`` stays on factor 0 (the reachable set from the
-    paper's initial state ``[value, 1, .., 1]``)."""
-    odd = value
-    e = 0
-    while odd % 2 == 0:
-        odd //= 2
-        e += 1
-    # distribute e twos into `parts` slots
-    for cut in itertools.combinations(range(e + parts - 1), parts - 1):
-        prev = -1
-        exps = []
-        for c in cut:
-            exps.append(c - prev - 1)
-            prev = c
-        exps.append(e + parts - 2 - prev)
-        factors = [2**x for x in exps]
-        factors[0] *= odd
-        yield tuple(factors)
-
-
-class GemmConfigSpace:
+class GemmConfigSpace(FactoredSearchSpace):
     """The search space for one GEMM workload ``(M, K, N)`` with nesting
     depths ``(d_m, d_k, d_n)`` (paper defaults 4, 2, 4 for GPUs; same
     defaults kept for the TPU adaptation — see DESIGN.md §2)."""
+
+    op = "gemm"
 
     def __init__(
         self,
@@ -178,153 +142,19 @@ class GemmConfigSpace:
             raise ValueError(f"bad GEMM dims ({m},{k},{n})")
         self.m, self.k, self.n = m, k, n
         self.d_m, self.d_k, self.d_n = d_m, d_k, d_n
-        self.extra_constraint = extra_constraint
-        self._actions = self._build_actions()
+        super().__init__((m, k, n), (d_m, d_k, d_n), extra_constraint)
 
-    # -- basic protocol ------------------------------------------------------
-    def initial_state(self) -> TilingState:
-        """Paper Sec. 5: ``s0 = [[m,1,..], [k,1], [n,1,..]]`` (no tiling)."""
-        return TilingState(
-            (self.m,) + (1,) * (self.d_m - 1),
-            (self.k,) + (1,) * (self.d_k - 1),
-            (self.n,) + (1,) * (self.d_n - 1),
-        )
+    def state_from_rows(self, rows: Sequence[Sequence[int]]) -> TilingState:
+        return TilingState.from_lists(rows)
 
-    def _build_actions(self) -> list[Action]:
-        acts = []
-        for dim, d in enumerate((self.d_m, self.d_k, self.d_n)):
-            for i in range(d):
-                for j in range(d):
-                    if i != j:
-                        acts.append(Action(dim, i, j))
-        return acts
-
-    @property
-    def actions(self) -> list[Action]:
-        return self._actions
-
-    @property
-    def n_actions(self) -> int:
-        return len(self._actions)
-
-    def step(self, s: TilingState, a: Action) -> Optional[TilingState]:
-        """Apply Eqn. 6/7; returns None when the move is illegitimate
-        (halving an odd factor)."""
-        lists = s.as_lists()
-        row = lists[a.dim]
-        if row[a.j] % 2 != 0:
-            return None
-        row[a.i] *= 2
-        row[a.j] //= 2
-        s2 = TilingState.from_lists(lists)
-        if not self.is_legitimate(s2):
-            return None
-        return s2
-
-    def neighbors(self, s: TilingState) -> list[TilingState]:
-        """g(s) of Eqn. 9 — all legitimate one-action successors."""
-        out = []
-        for a in self._actions:
-            s2 = self.step(s, a)
-            if s2 is not None:
-                out.append(s2)
-        return out
-
-    def is_legitimate(self, s: TilingState) -> bool:
-        """J of Eqn. 5: exact products, positive integers, plus optional
-        hardware constraint (e.g. VMEM budget)."""
-        if any(f < 1 for f in s.m + s.k + s.n):
-            return False
-        if math.prod(s.m) != self.m or math.prod(s.k) != self.k:
-            return False
-        if math.prod(s.n) != self.n:
-            return False
-        if len(s.m) != self.d_m or len(s.k) != self.d_k or len(s.n) != self.d_n:
-            return False
-        if self.extra_constraint is not None and not self.extra_constraint(s):
-            return False
-        return True
-
-    # -- enumeration / sampling ----------------------------------------------
-    def size(self) -> int:
-        return (
-            count_compositions_pow2(self.m, self.d_m)
-            * count_compositions_pow2(self.k, self.d_k)
-            * count_compositions_pow2(self.n, self.d_n)
-        )
-
-    def enumerate(self) -> Iterator[TilingState]:
-        for fm in compositions_pow2(self.m, self.d_m):
-            for fk in compositions_pow2(self.k, self.d_k):
-                for fn in compositions_pow2(self.n, self.d_n):
-                    s = TilingState(fm, fk, fn)
-                    if self.extra_constraint is None or self.extra_constraint(s):
-                        yield s
-
-    def random_state(self, rng: _random.Random) -> TilingState:
-        def rand_comp(value: int, parts: int) -> tuple[int, ...]:
-            odd = value
-            e = 0
-            while odd % 2 == 0:
-                odd //= 2
-                e += 1
-            exps = [0] * parts
-            for _ in range(e):
-                exps[rng.randrange(parts)] += 1
-            factors = [2**x for x in exps]
-            factors[0] *= odd
-            return tuple(factors)
-
-        for _ in range(64):
-            s = TilingState(
-                rand_comp(self.m, self.d_m),
-                rand_comp(self.k, self.d_k),
-                rand_comp(self.n, self.d_n),
-            )
-            if self.is_legitimate(s):
-                return s
-        return self.initial_state()
-
-    def transplant(self, s: TilingState) -> Optional[TilingState]:
-        """Map a state tuned for *another* workload into this space —
-        the warm-start translation.
-
-        Tiling quality is carried by the inner factors (VMEM block, MXU
-        sub-tile, register granularity), which transfer across GEMM
-        shapes; the grid factor merely covers whatever dimension is
-        left.  So: keep the donor's inner factors (resized to this
-        space's nesting depth, register factor kept innermost), shrink
-        them until their product divides the new dimension, and absorb
-        the remainder — including the dimension's odd part, which keeps
-        the state inside the reachable set — into the grid factor.
-        Returns None when no legitimate translation exists.
-        """
-        dims = (self.m, self.k, self.n)
-        depths = (self.d_m, self.d_k, self.d_n)
-        rows = []
-        for row, dim, d in zip(s.as_lists(), dims, depths):
-            inner = list(row[1:])
-            if len(inner) > d - 1:  # merge overflow into the outermost inner slot
-                keep = len(inner) - (d - 1)
-                inner = [math.prod(inner[: keep + 1])] + inner[keep + 1:]
-            while len(inner) < d - 1:  # pad outermost, keep register innermost
-                inner.insert(0, 1)
-            for _ in range(64):
-                p = math.prod(inner) if inner else 1
-                if p >= 1 and dim % p == 0:
-                    break
-                big = max(range(len(inner)), key=lambda i: inner[i])
-                inner[big] = inner[big] // 2 if inner[big] % 2 == 0 else 1
-            p = math.prod(inner) if inner else 1
-            if dim % p != 0:
-                inner, p = [1] * (d - 1), 1
-            rows.append([dim // p] + inner)
-        s2 = TilingState.from_lists(rows)
-        return s2 if self.is_legitimate(s2) else None
+    # -- hardware footprint ---------------------------------------------------
+    def working_set_bytes(self, s: TilingState, in_bytes: int = 2) -> int:
+        """Double-buffered A/B blocks plus the f32 accumulator — the VMEM
+        working set every cost backend guards with."""
+        bm, bk, bn = s.block_m, s.block_k, s.block_n
+        return 2 * (bm * bk + bk * bn) * in_bytes + bm * bn * 4
 
     # -- featurization (for surrogate / policy models) ------------------------
-    FEATURE_NAMES = None  # set lazily per space
-
     def features(self, s: TilingState) -> np.ndarray:
         """Dense feature vector: log2 of every factor plus derived tile
         descriptors.  Used by the GBT surrogate, the RNN controller
@@ -356,3 +186,6 @@ class GemmConfigSpace:
             f"GemmConfigSpace(({self.m},{self.k},{self.n}), "
             f"d=({self.d_m},{self.d_k},{self.d_n}), size={self.size()})"
         )
+
+
+register_state_type("gemm", TilingState)

@@ -1,5 +1,6 @@
 from .base import CostBackend, CountingCost, SleepingCost, backend_from_spec
 from .analytical import AnalyticalTPUCost, TpuSpec
+from .flash_analytical import FlashAnalyticalCost
 from .measured import XLATimedCost, PallasInterpretCost
 
 __all__ = [
@@ -8,6 +9,7 @@ __all__ = [
     "SleepingCost",
     "backend_from_spec",
     "AnalyticalTPUCost",
+    "FlashAnalyticalCost",
     "TpuSpec",
     "XLATimedCost",
     "PallasInterpretCost",

@@ -55,6 +55,7 @@ class TpuSpec:
     """TPU v5e-like single-chip constants (shared with §Roofline)."""
 
     peak_flops = 197e12  # bf16 FLOP/s
+    vpu_flops = 19.7e12  # elementwise f32 throughput (softmax path)
     hbm_bw = 819e9  # B/s
     ici_bw = 50e9  # B/s per link (used by the distributed roofline)
     vmem_bytes = 16 * 1024 * 1024  # usable VMEM budget for one kernel
@@ -91,8 +92,7 @@ class AnalyticalTPUCost(CostBackend):
 
     # -- components -----------------------------------------------------------
     def vmem_bytes(self, s: TilingState) -> int:
-        bm, bk, bn = s.block_m, s.block_k, s.block_n
-        return 2 * (bm * bk + bk * bn) * self.in_bytes + bm * bn * 4
+        return self.space.working_set_bytes(s, self.in_bytes)
 
     def compute_time(self, s: TilingState) -> float:
         sp = self.spec
@@ -135,6 +135,7 @@ class AnalyticalTPUCost(CostBackend):
         return (
             f"r{self.n_repeats}|noise{self.noise_sigma:g}|seed{self.seed}"
             f"|io{self.in_bytes}.{self.out_bytes}"
+            + self.space_fingerprint()
         )
 
     def worker_spec(self):

@@ -1,5 +1,7 @@
 """Cost-backend protocol — the paper's "run the configuration on target
-hardware" abstraction (TVM measure).  Backends return seconds-per-GEMM;
+hardware" abstraction (TVM measure).  A backend times one op's schedule
+states (``backend.op``, derived from its space) and returns seconds per
+kernel invocation;
 ``math.inf`` marks a configuration that fails to build/run (illegitimate
 on the hardware), matching how TVM reports failed measurements.
 
@@ -39,7 +41,7 @@ import os
 import time
 from typing import Optional, Sequence
 
-from ..config_space import GemmConfigSpace, TilingState
+from ..space import SearchSpace, State
 
 __all__ = ["CostBackend", "CountingCost", "SleepingCost", "backend_from_spec"]
 
@@ -58,16 +60,21 @@ class CostBackend(abc.ABC):
 
     name: str = "base"
 
-    def __init__(self, space: GemmConfigSpace, n_repeats: int = 1):
+    def __init__(self, space: SearchSpace, n_repeats: int = 1):
         self.space = space
         # paper: "arithmetic mean for 10 repeated trials"
         self.n_repeats = n_repeats
 
+    @property
+    def op(self) -> str:
+        """Which operator this backend times (journal/cache scoping)."""
+        return getattr(self.space, "op", "gemm")
+
     @abc.abstractmethod
-    def cost_once(self, s: TilingState, repeat_idx: int) -> float:
+    def cost_once(self, s: State, repeat_idx: int) -> float:
         ...
 
-    def cost(self, s: TilingState) -> float:
+    def cost(self, s: State) -> float:
         if not self.space.is_legitimate(s):
             return math.inf
         total = 0.0
@@ -78,7 +85,7 @@ class CostBackend(abc.ABC):
             total += c
         return total / self.n_repeats
 
-    def batch_cost(self, states: Sequence[TilingState]) -> list[float]:
+    def batch_cost(self, states: Sequence[State]) -> list[float]:
         """Measure a batch; value-equivalent to ``[cost(s) for s in states]``."""
         return [self.cost(s) for s in states]
 
@@ -87,7 +94,18 @@ class CostBackend(abc.ABC):
         name), so persistent caches never serve a cost measured under
         different settings — e.g. a different noise model or repeat
         count — as if it were this backend's measurement."""
-        return f"r{self.n_repeats}"
+        return f"r{self.n_repeats}" + self.space_fingerprint()
+
+    def space_fingerprint(self) -> str:
+        """Fingerprint component for non-default space construction
+        kwargs (``SearchSpace.spec_kwargs``) — e.g. flash's ``causal``
+        flag changes every measured value, so journals must scope on it.
+        Empty kwargs contribute nothing, keeping pre-registry GEMM
+        fingerprints (and their journals) valid."""
+        kw = getattr(self.space, "spec_kwargs", dict)() or {}
+        if not kw:
+            return ""
+        return "|" + ",".join(f"{k}={v!r}" for k, v in sorted(kw.items()))
 
     def worker_spec(self) -> Optional[tuple[str, dict]]:
         """Picklable ``("module:callable", kwargs)`` recipe that rebuilds
@@ -144,7 +162,7 @@ class CountingCost(CostBackend):
         self.timeout_s = timeout_s
         self.n_workers = max(1, n_workers)
 
-    def cost_once(self, s: TilingState, repeat_idx: int) -> float:  # pragma: no cover
+    def cost_once(self, s: State, repeat_idx: int) -> float:  # pragma: no cover
         raise RuntimeError("CountingCost delegates via cost()")
 
     def _lane_s(self, c: float) -> float:
@@ -153,13 +171,13 @@ class CountingCost(CostBackend):
             t += min(c * self.inner.n_repeats, self.timeout_s)
         return t
 
-    def cost(self, s: TilingState) -> float:
+    def cost(self, s: State) -> float:
         c = self.inner.cost(s)
         self.n_measured += 1
         self.simulated_clock_s += self._lane_s(c)
         return c
 
-    def batch_cost(self, states: Sequence[TilingState]) -> list[float]:
+    def batch_cost(self, states: Sequence[State]) -> list[float]:
         out: list[float] = []
         for i in range(0, len(states), self.n_workers):
             wave = states[i : i + self.n_workers]
@@ -229,10 +247,10 @@ class SleepingCost(CostBackend):
         self.exit_keys = frozenset(exit_keys)
         self.hang_keys = frozenset(hang_keys)
 
-    def cost_once(self, s: TilingState, repeat_idx: int) -> float:  # pragma: no cover
+    def cost_once(self, s: State, repeat_idx: int) -> float:  # pragma: no cover
         raise RuntimeError("SleepingCost delegates via cost()")
 
-    def cost(self, s: TilingState) -> float:
+    def cost(self, s: State) -> float:
         key = s.key()
         if key in self.exit_keys:
             os._exit(13)  # simulated segfault: no exception, no cleanup

@@ -1,0 +1,193 @@
+"""Analytical TPU-v5e cost model for the blocked flash-attention
+schedule — the flash op's default oracle, mirroring
+:class:`~repro.core.cost.analytical.AnalyticalTPUCost` for GEMM.
+
+Model of one ``(block_q, block_kv)`` schedule of the Pallas kernel
+(`repro.kernels.flash_attention`), per batch/kv-head slice:
+
+  grid      = n_q_blocks parallel cells; each streams kv blocks through
+              the online-softmax inner loop (causal cells stop at the
+              diagonal, so coarser blocks waste masked work)
+  VMEM use  = q block + resident K/V + f32 accumulator + logits tile
+              -> inf ("fails to build") above the budget
+  compute   = per-visit MXU calls (q@k^T and p@v), padded to
+              sublane/lane/MXU granularity -> misaligned blocks waste
+              systolic cycles; plus the VPU softmax (exp/max/sum) over
+              the logits tile
+  memory    = HBM traffic: Q read once, K/V read once (the kernel keeps
+              them resident across q cells), O written once
+  overhead  = per-grid-cell dispatch + per-kv-visit slice/issue cost
+
+  cost      = max(compute, memory) + overheads   [+ lognormal noise]
+
+The causal visit count is exact (the kernel's ``last`` bound), so the
+model rewards fine kv blocks near the diagonal and punishes the
+per-visit overhead of making them *too* fine — a real optimum interior
+to the space.
+"""
+
+from __future__ import annotations
+
+import math
+import zlib
+
+import numpy as np
+
+from ..flash_space import FlashAttnConfigSpace, FlashScheduleState
+from .analytical import TpuSpec, _pad
+from .base import CostBackend
+
+__all__ = ["FlashAnalyticalCost"]
+
+
+def _flash_analytical_from_spec(
+    seq_q: int, seq_kv: int, head_dim: int, d_q: int, d_kv: int,
+    causal: bool, n_repeats: int, in_bytes: int, out_bytes: int,
+    noise_sigma: float, seed: int,
+) -> "FlashAnalyticalCost":
+    """Worker-process factory (see ``CostBackend.worker_spec``)."""
+    return FlashAnalyticalCost(
+        FlashAttnConfigSpace(seq_q, seq_kv, head_dim, d_q, d_kv, causal=causal),
+        n_repeats=n_repeats,
+        in_bytes=in_bytes,
+        out_bytes=out_bytes,
+        noise_sigma=noise_sigma,
+        seed=seed,
+    )
+
+
+class FlashAnalyticalCost(CostBackend):
+    name = "analytical_tpu_v5e"
+
+    def __init__(
+        self,
+        space: FlashAttnConfigSpace,
+        n_repeats: int = 1,
+        in_bytes: int = 2,  # bf16 activations
+        out_bytes: int = 2,
+        noise_sigma: float = 0.0,
+        seed: int = 0,
+        spec: TpuSpec | None = None,
+    ):
+        super().__init__(space, n_repeats)
+        self.in_bytes = in_bytes
+        self.out_bytes = out_bytes
+        self.noise_sigma = noise_sigma
+        self.seed = seed
+        self.spec = spec or TpuSpec()
+        # visits depend only on the block schedule; compute_time and
+        # overhead_time both ask per repeat, so memoize per (bq, bkv)
+        self._visits_cache: dict[tuple[int, int], int] = {}
+
+    # -- components -----------------------------------------------------------
+    def vmem_bytes(self, s: FlashScheduleState) -> int:
+        return self.space.working_set_bytes(s, self.in_bytes)
+
+    def kv_visits(self, s: FlashScheduleState) -> int:
+        """Total kv-block visits across the q grid — exact, matching the
+        kernel's causal early-exit bound ``last``."""
+        bq, bkv = s.block_q, s.block_kv
+        n_q, n_kv = s.n_q_blocks, s.n_kv_blocks
+        if not self.space.causal:
+            return n_q * n_kv
+        cached = self._visits_cache.get((bq, bkv))
+        if cached is None:
+            ends = (np.arange(1, n_q + 1, dtype=np.int64) * bq + bkv - 1) // bkv
+            cached = int(np.minimum(ends, n_kv).sum())
+            self._visits_cache[(bq, bkv)] = cached
+        return cached
+
+    def compute_time(self, s: FlashScheduleState) -> float:
+        sp = self.spec
+        bq, bkv = s.block_q, s.block_kv
+        hd = self.space.head_dim
+        sub_gran = sp.sublane.get(self.in_bytes, 8)
+        visits = self.kv_visits(s)
+        # two MXU calls per visit: logits = q @ k^T, out += p @ v
+        call_flops = 2.0 * _pad(bq, sub_gran) * (
+            _pad(hd, sp.mxu_k) * _pad(bkv, sp.lane)  # q @ k^T
+            + _pad(bkv, sp.mxu_k) * _pad(hd, sp.lane)  # p @ v
+        )
+        mxu = visits * call_flops / sp.peak_flops
+        # online softmax on the VPU: ~8 elementwise ops per logit
+        vpu = visits * 8.0 * _pad(bq, sub_gran) * _pad(bkv, sp.lane) / sp.vpu_flops
+        return mxu + vpu + visits * 2 * sp.mxu_call_overhead_s
+
+    def memory_time(self, s: FlashScheduleState) -> float:
+        sp = self.spec
+        sq, skv, hd = self.space.seq_q, self.space.seq_kv, self.space.head_dim
+        traffic = (
+            sq * hd * self.in_bytes  # Q read once
+            + 2 * skv * hd * self.in_bytes  # K and V, resident across cells
+            + sq * hd * self.out_bytes  # O written once
+        )
+        return traffic / sp.hbm_bw
+
+    def overhead_time(self, s: FlashScheduleState) -> float:
+        sp = self.spec
+        # grid dispatch per q cell + dynamic-slice issue per kv visit
+        return (
+            s.n_q_blocks * sp.grid_step_overhead_s
+            + self.kv_visits(s) * 0.5 * sp.grid_step_overhead_s
+        )
+
+    def breakdown(self, s: FlashScheduleState) -> dict:
+        return {
+            "vmem_bytes": self.vmem_bytes(s),
+            "kv_visits": self.kv_visits(s),
+            "compute_s": self.compute_time(s),
+            "memory_s": self.memory_time(s),
+            "overhead_s": self.overhead_time(s),
+        }
+
+    # -- CostBackend ------------------------------------------------------------
+    def measure_fingerprint(self) -> str:
+        return (
+            f"r{self.n_repeats}|noise{self.noise_sigma:g}|seed{self.seed}"
+            f"|io{self.in_bytes}.{self.out_bytes}"
+            + self.space_fingerprint()
+        )
+
+    def worker_spec(self):
+        # constraint closures and subclassed chip specs don't survive the
+        # spec round-trip; refuse to ship rather than rebuild a subtly
+        # different model (same policy as AnalyticalTPUCost)
+        if self.space.extra_constraint is not None or type(self.spec) is not TpuSpec:
+            return None
+        sp = self.space
+        return (
+            "repro.core.cost.flash_analytical:_flash_analytical_from_spec",
+            {
+                "seq_q": sp.seq_q, "seq_kv": sp.seq_kv, "head_dim": sp.head_dim,
+                "d_q": sp.d_q, "d_kv": sp.d_kv, "causal": sp.causal,
+                "n_repeats": self.n_repeats,
+                "in_bytes": self.in_bytes, "out_bytes": self.out_bytes,
+                "noise_sigma": self.noise_sigma, "seed": self.seed,
+            },
+        )
+
+    def _noise_factor(self, s: FlashScheduleState, repeat_idx: int) -> float:
+        # deterministic per-(state, repeat) jitter, stable across processes
+        h = zlib.crc32(f"{self.seed}|{s.key()}|{repeat_idx}".encode()) & 0xFFFFFFFF
+        rng = np.random.default_rng(h)
+        return rng.lognormal(0.0, self.noise_sigma)
+
+    def cost_once(self, s: FlashScheduleState, repeat_idx: int) -> float:
+        if self.vmem_bytes(s) > self.spec.vmem_bytes:
+            return math.inf  # does not fit VMEM: measurement failure
+        base = max(self.compute_time(s), self.memory_time(s)) + self.overhead_time(s)
+        if self.noise_sigma <= 0.0:
+            return base
+        return float(base * self._noise_factor(s, repeat_idx))
+
+    def optimum(self, max_states: int = 2_000_000) -> tuple[FlashScheduleState, float]:
+        """Brute-force the space (only for small spaces / tests)."""
+        if self.space.size() > max_states:
+            raise ValueError("space too large to brute force")
+        best_s, best_c = None, math.inf
+        for s in self.space.enumerate():
+            c = self.cost(s)
+            if c < best_c:
+                best_s, best_c = s, c
+        assert best_s is not None
+        return best_s, best_c

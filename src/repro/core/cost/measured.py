@@ -3,12 +3,13 @@
 The paper measures candidate configurations on real hardware (Titan Xp).
 These backends do the honest equivalent available in this container:
 
-* :class:`XLATimedCost` — realizes the *tiled loop structure* of a
-  configuration as an XLA:CPU program (fori_loop over the macro-grid with
-  dynamic-sliced blocks, k innermost with VMEM-style accumulation) and
-  times it.  Different tilings genuinely run at different speeds on the
-  CPU cache hierarchy, so the search problem is real, just on a different
-  memory system than the TPU target.
+* :class:`XLATimedCost` — realizes the *blocked loop structure* of a
+  schedule as an XLA:CPU program and times it.  The per-op build recipe
+  comes from the op registry (``repro.core.ops``): a tiled macro-grid
+  matmul for ``gemm``, the blocked online-softmax loop for ``flash``.
+  Different schedules genuinely run at different speeds on the CPU cache
+  hierarchy, so the search problem is real, just on a different memory
+  system than the TPU target.
 
   Compilation — not timing, not search logic — dominates the trial cost
   of this backend, so it is engineered out of the hot path at every
@@ -18,7 +19,7 @@ These backends do the honest equivalent available in this container:
   - an :class:`ExecutableCache` holds compiled programs behind an
     LRU-bounded in-memory layer and an optional **persistent on-disk
     layer** (JAX's AOT ``serialize_executable`` facility), content-keyed
-    by ``(space dims, dtype, TilingState.key(), jax/jaxlib version)`` —
+    by ``(op, workload dims, dtype, state.key(), jax/jaxlib version)`` —
     a re-run, a sibling engine, or a worker process on the same host
     skips straight past compilation;
   - ``batch_cost`` compiles a batch's *unique* unbuilt candidates
@@ -34,10 +35,12 @@ These backends do the honest equivalent available in this container:
     still overlap — they are two orders of magnitude longer than the
     timed region, and serializing them would erase the parallel win.
 
-* :class:`PallasInterpretCost` — times the actual Pallas kernel
-  (`repro.kernels.gemm`) in ``interpret=True`` mode.  Functionally
-  faithful to the TPU kernel; timing reflects the interpreter, so this
-  backend is for correctness-coupled search demos on small shapes.
+* :class:`PallasInterpretCost` — times the op's actual Pallas kernel
+  (via the registry's ``pallas_run`` binding) in ``interpret=True``
+  mode.  Functionally faithful to the TPU kernel; timing reflects the
+  interpreter, so this backend is for correctness-coupled search demos
+  on small shapes.  Process-shippable via ``worker_spec()`` like the
+  other backends.
 
 Both are deliberately interchangeable with :class:`AnalyticalTPUCost`
 behind the same :class:`CostBackend` protocol (DESIGN.md §2).
@@ -57,7 +60,7 @@ from typing import Optional
 
 import numpy as np
 
-from ..config_space import GemmConfigSpace, TilingState
+from ..space import SearchSpace, State
 from .base import CostBackend
 
 __all__ = ["XLATimedCost", "PallasInterpretCost", "ExecutableCache"]
@@ -138,15 +141,23 @@ class ExecutableCache:
 
     # -- key/paths -----------------------------------------------------------
     @staticmethod
-    def content_key(space: GemmConfigSpace, dtype: str, state: TilingState) -> str:
+    def content_key(space: SearchSpace, dtype: str, state: State) -> str:
         """Content key: the compiled program is fully determined by the
-        GEMM dims, dtype, tiling state, and the jax/jaxlib (XLA) version
-        that produced it."""
+        op, its workload dims, dtype, schedule state, and the jax/jaxlib
+        (XLA) version that produced it.  The op field keeps one shared
+        cache directory safe across operators."""
         import jax
         import jaxlib
 
+        op = getattr(space, "op", "gemm")
+        dims = "x".join(map(str, space.dims))
+        # non-default space construction kwargs (e.g. flash's causal
+        # flag) change the compiled program: fold them into the key.
+        # Empty kwargs add nothing, so pre-registry GEMM keys survive.
+        kw = getattr(space, "spec_kwargs", dict)() or {}
+        extra = "".join(f"/{k}={v!r}" for k, v in sorted(kw.items()))
         raw = (
-            f"m{space.m}k{space.k}n{space.n}/{dtype}/{state.key()}"
+            f"{op}/{dims}/{dtype}/{state.key()}{extra}"
             f"/jax{jax.__version__}/jaxlib{jaxlib.__version__}"
         )
         return hashlib.sha256(raw.encode()).hexdigest()[:40]
@@ -238,14 +249,16 @@ class ExecutableCache:
 
 
 def _xla_timed_from_spec(
-    m: int, k: int, n: int, d_m: int, d_k: int, d_n: int,
+    op: str, dims: list, depths: list, space_kwargs: dict,
     n_repeats: int, dtype: str, vmem_guard_bytes: int, seed: int,
     n_build_workers: int, cache_dir: Optional[str],
     cache_capacity: int, timing_lock_path: Optional[str],
 ) -> "XLATimedCost":
     """Worker-process factory (see ``CostBackend.worker_spec``)."""
+    from ..ops import get_op
+
     return XLATimedCost(
-        GemmConfigSpace(m, k, n, d_m, d_k, d_n),
+        get_op(op).make_space(tuple(dims), tuple(depths), **space_kwargs),
         n_repeats=n_repeats,
         dtype=dtype,
         vmem_guard_bytes=vmem_guard_bytes,
@@ -262,7 +275,7 @@ class XLATimedCost(CostBackend):
 
     def __init__(
         self,
-        space: GemmConfigSpace,
+        space: SearchSpace,
         n_repeats: int = 3,
         dtype: str = "float32",
         vmem_guard_bytes: int = 16 * 1024 * 1024,
@@ -276,18 +289,17 @@ class XLATimedCost(CostBackend):
         import jax
         import jax.numpy as jnp
 
+        from ..ops import get_op  # lazy: the registry imports cost modules
+
         self._jax, self._jnp = jax, jnp
         self.dtype = dtype
         self.vmem_guard_bytes = vmem_guard_bytes
         self.seed = seed
         self.n_build_workers = max(1, n_build_workers)
-        rng = np.random.default_rng(seed)
-        self._A = jnp.asarray(
-            rng.standard_normal((space.m, space.k)), dtype=dtype
-        )
-        self._B = jnp.asarray(
-            rng.standard_normal((space.k, space.n)), dtype=dtype
-        )
+        # the op binding supplies the operands and the per-state timed
+        # program -- this backend is build-recipe-agnostic
+        self._opspec = get_op(self.op)
+        self._args = self._opspec.timed_operands(space, dtype, seed)
         self.cache = ExecutableCache(capacity=cache_capacity, cache_dir=cache_dir)
         if timing_lock_path is None and cache_dir is not None:
             timing_lock_path = os.path.join(cache_dir, ".timing.lock")
@@ -295,46 +307,25 @@ class XLATimedCost(CostBackend):
         self._gate = _TimingGate(timing_lock_path)
 
     # -- build ---------------------------------------------------------------
-    def _build(self, s: TilingState):
-        """Lower + AOT-compile the tiled program for ``s`` (cold path)."""
-        jax, jnp = self._jax, self._jnp
-        lax = jax.lax
-        gm, gk, gn = s.grid
-        bm, bk, bn = s.block_m, s.block_k, s.block_n
-        M, N = self.space.m, self.space.n
-
-        def fn(A, B):
-            C = jnp.zeros((M, N), dtype=self.dtype)
-
-            def body(idx, C):
-                ik = idx % gk
-                rest = idx // gk
-                i_n = rest % gn
-                i_m = rest // gn
-                a = lax.dynamic_slice(A, (i_m * bm, ik * bk), (bm, bk))
-                b = lax.dynamic_slice(B, (ik * bk, i_n * bn), (bk, bn))
-                c = jnp.dot(a, b)
-                old = lax.dynamic_slice(C, (i_m * bm, i_n * bn), (bm, bn))
-                return lax.dynamic_update_slice(C, old + c, (i_m * bm, i_n * bn))
-
-            return lax.fori_loop(0, gm * gk * gn, body, C)
-
+    def _build(self, s: State):
+        """Lower + AOT-compile the op's timed program for ``s`` (cold
+        path) -- the traceable realization of the schedule comes from the
+        op registry's ``timed_fn`` binding."""
+        fn = self._opspec.timed_fn(self.space, s, self.dtype)
         t0 = time.perf_counter()
-        compiled = jax.jit(fn).lower(self._A, self._B).compile()
+        compiled = self._jax.jit(fn).lower(*self._args).compile()
         self.cache.count_compile(time.perf_counter() - t0)
         return compiled
 
-    def _fits_vmem(self, s: TilingState) -> bool:
+    def _fits_vmem(self, s: State) -> bool:
         # Honor the TPU VMEM legitimacy constraint so the searched space
         # matches what the Pallas kernel would accept on hardware.
         itemsize = self._jnp.dtype(self.dtype).itemsize
-        bm, bk, bn = s.block_m, s.block_k, s.block_n
         return (
-            2 * (bm * bk + bk * bn) * itemsize + bm * bn * 4
-            <= self.vmem_guard_bytes
+            self.space.working_set_bytes(s, itemsize) <= self.vmem_guard_bytes
         )
 
-    def _ensure(self, s: TilingState, count_mem_hit: bool = True):
+    def _ensure(self, s: State, count_mem_hit: bool = True):
         """Resolve the executable for ``s``: in-memory LRU, then the
         persistent disk layer, then a fresh compile (persisted for the
         next session/worker).  Disk loads and compiles are warmed with
@@ -354,7 +345,7 @@ class XLATimedCost(CostBackend):
         # warmup: never timed, but gated — a warm run on the cores would
         # contend with a sibling lane's in-flight timed region
         with self._gate:
-            fn(self._A, self._B).block_until_ready()
+            fn(*self._args).block_until_ready()
         self.cache.put_mem(ckey, fn)
         return fn
 
@@ -367,12 +358,12 @@ class XLATimedCost(CostBackend):
         for _ in range(self.n_repeats):
             with self._gate:
                 t0 = time.perf_counter()
-                fn(self._A, self._B).block_until_ready()
+                fn(*self._args).block_until_ready()
                 total += time.perf_counter() - t0
             self.cache.count_timed()
         return total / self.n_repeats
 
-    def cost(self, s: TilingState) -> float:
+    def cost(self, s: State) -> float:
         # resolve once per *trial* (not per repeat): the cache counters
         # feed compile_cache_hit_rate, which must mean "fraction of
         # trials served without a fresh compile"
@@ -380,7 +371,7 @@ class XLATimedCost(CostBackend):
             return math.inf
         return self._timed_mean(self._ensure(s))
 
-    def cost_once(self, s: TilingState, repeat_idx: int) -> float:
+    def cost_once(self, s: State, repeat_idx: int) -> float:
         # kept for the CostBackend protocol; cost() bypasses it so the
         # executable resolve (and its counters) happen once per trial
         if not self._fits_vmem(s):
@@ -388,7 +379,7 @@ class XLATimedCost(CostBackend):
         fn = self._ensure(s)
         with self._gate:
             t0 = time.perf_counter()
-            fn(self._A, self._B).block_until_ready()
+            fn(*self._args).block_until_ready()
             dt = time.perf_counter() - t0
         self.cache.count_timed()
         return dt
@@ -445,34 +436,39 @@ class XLATimedCost(CostBackend):
     # -- CostBackend protocol ------------------------------------------------
     def measure_fingerprint(self) -> str:
         # seed fixes the operand contents; dtype changes the program
-        return f"r{self.n_repeats}|{self.dtype}|seed{self.seed}"
+        return (
+            f"r{self.n_repeats}|{self.dtype}|seed{self.seed}"
+            + self.space_fingerprint()
+        )
 
     def compile_stats(self) -> Optional[dict]:
         return self.cache.stats()
 
     def worker_spec(self):
-        if self.space.extra_constraint is not None:
+        space_kwargs = self.space.spec_kwargs()
+        if space_kwargs is None:
             # arbitrary closures don't survive the spec round-trip;
             # refuse to ship rather than search a subtly different space
             return None
+        dims = self.space.dims
         lock = self.timing_lock_path
         if lock is None:
             # all workers rebuilt from this spec must share one gate so
             # their timed regions serialize; derive a stable path from
             # the measurement identity
             digest = hashlib.sha256(
-                f"{self.space.m}x{self.space.k}x{self.space.n}"
+                f"{self.op}/{'x'.join(map(str, dims))}"
                 f"/{self.dtype}/s{self.seed}/{os.getpid()}".encode()
             ).hexdigest()[:16]
             lock = os.path.join(
                 tempfile.gettempdir(), f"repro-xla-timing-{digest}.lock"
             )
-        sp = self.space
         return (
             "repro.core.cost.measured:_xla_timed_from_spec",
             {
-                "m": sp.m, "k": sp.k, "n": sp.n,
-                "d_m": sp.d_m, "d_k": sp.d_k, "d_n": sp.d_n,
+                "op": self.op, "dims": list(dims),
+                "depths": list(self.space.depths),
+                "space_kwargs": space_kwargs,
                 "n_repeats": self.n_repeats,
                 "dtype": self.dtype,
                 "vmem_guard_bytes": self.vmem_guard_bytes,
@@ -485,29 +481,61 @@ class XLATimedCost(CostBackend):
         )
 
 
+def _pallas_interpret_from_spec(
+    op: str, dims: list, depths: list, space_kwargs: dict,
+    n_repeats: int, seed: int,
+) -> "PallasInterpretCost":
+    """Worker-process factory (see ``CostBackend.worker_spec``)."""
+    from ..ops import get_op
+
+    return PallasInterpretCost(
+        get_op(op).make_space(tuple(dims), tuple(depths), **space_kwargs),
+        n_repeats=n_repeats,
+        seed=seed,
+    )
+
+
 class PallasInterpretCost(CostBackend):
+    """Times the op's *actual Pallas kernel* in ``interpret=True`` mode,
+    via the op registry's ``pallas_run`` binding (``repro.kernels.gemm``
+    for GEMM, ``repro.kernels.flash_attention`` for flash).  Process-
+    shippable like the other backends: ``worker_spec()`` ships the op
+    name + dims, and the worker rebuilds space and operands from the
+    registry."""
+
     name = "pallas_interpret_timed"
 
-    def __init__(self, space: GemmConfigSpace, n_repeats: int = 1, seed: int = 0):
+    def __init__(self, space: SearchSpace, n_repeats: int = 1, seed: int = 0):
         super().__init__(space, n_repeats)
-        import jax.numpy as jnp
+        from ..ops import get_op  # lazy: the registry imports cost modules
 
-        rng = np.random.default_rng(seed)
-        self._A = jnp.asarray(
-            rng.standard_normal((space.m, space.k)), dtype=jnp.float32
-        )
-        self._B = jnp.asarray(
-            rng.standard_normal((space.k, space.n)), dtype=jnp.float32
-        )
+        self.seed = seed
+        self._opspec = get_op(self.op)
+        if self._opspec.pallas_run is None:
+            raise ValueError(f"op {self.op!r} has no Pallas kernel binding")
+        self._args = self._opspec.timed_operands(space, "float32", seed)
 
-    def cost_once(self, s: TilingState, repeat_idx: int) -> float:
-        from repro.kernels.gemm import gemm_pallas, kernel_config_from_state
-
+    def cost_once(self, s: State, repeat_idx: int) -> float:
         try:
-            cfg = kernel_config_from_state(s)
-        except ValueError:
+            t0 = time.perf_counter()
+            out = self._opspec.pallas_run(self.space, s, self._args, interpret=True)
+            out.block_until_ready()
+            return time.perf_counter() - t0
+        except ValueError:  # schedule the kernel refuses (bad blocks)
             return math.inf
-        t0 = time.perf_counter()
-        out = gemm_pallas(self._A, self._B, cfg, interpret=True)
-        out.block_until_ready()
-        return time.perf_counter() - t0
+
+    def worker_spec(self):
+        space_kwargs = self.space.spec_kwargs()
+        if space_kwargs is None:
+            # constraint closures don't survive the spec round-trip
+            return None
+        return (
+            "repro.core.cost.measured:_pallas_interpret_from_spec",
+            {
+                "op": self.op, "dims": list(self.space.dims),
+                "depths": list(self.space.depths),
+                "space_kwargs": space_kwargs,
+                "n_repeats": self.n_repeats,
+                "seed": self.seed,
+            },
+        )

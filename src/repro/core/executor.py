@@ -50,8 +50,8 @@ import multiprocessing
 import time
 from typing import Optional, Sequence
 
-from .config_space import TilingState
 from .cost.base import CostBackend, backend_from_spec
+from .space import State
 
 __all__ = [
     "LaneExecutor",
@@ -89,7 +89,7 @@ class LaneExecutor(abc.ABC):
     def run_wave(
         self,
         backend: CostBackend,
-        states: Sequence[TilingState],
+        states: Sequence[State],
         timeout_s: Optional[float] = None,
     ) -> list[LaneResult]:
         """Measure ``states`` (one per lane); results align with input."""
@@ -138,7 +138,7 @@ class ThreadExecutor(LaneExecutor):
         timeout = timeout_s if timeout_s is not None else self.timeout_s
         box: list[Optional[LaneResult]] = [None] * len(states)
 
-        def lane(i: int, s: TilingState) -> None:
+        def lane(i: int, s: State) -> None:
             t0 = time.perf_counter()
             try:
                 c = backend.cost(s)
@@ -208,7 +208,9 @@ def _worker_main(conn) -> None:
                 backend = backends[key] = backend_from_spec(spec)
             before = backend.compile_stats()
             t0 = time.perf_counter()
-            cost = backend.cost(TilingState.from_lists(state_lists))
+            # the state class is op-specific: the rebuilt backend's space
+            # owns the deserialization (operator-agnostic lane protocol)
+            cost = backend.cost(backend.space.state_from_lists(state_lists))
             wall = time.perf_counter() - t0
             conn.send(("ok", cost, wall, _compile_delta(backend, before)))
         except BaseException as e:  # noqa: BLE001 — the worker must survive

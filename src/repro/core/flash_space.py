@@ -1,0 +1,175 @@
+"""Flash-attention schedule space — the first non-GEMM
+:class:`~repro.core.space.SearchSpace` instance.
+
+The tunable schedule of `repro.kernels.flash_attention` is its
+``(block_q, block_kv)`` pair: the q-sequence is split into
+``seq_q // block_q`` parallel grid cells and each cell streams the kv
+sequence ``block_kv`` rows at a time through the online-softmax inner
+loop.  That is exactly the paper's factored MDP with two dimension rows
+instead of three:
+
+    s = [s_q, s_kv]      s_q = [q0, q1, ..],  prod == seq_q
+                         s_kv = [kv0, kv1, ..], prod == seq_kv
+
+with ``block_q = prod(s_q[1:])`` (grid cells ``q0``) and
+``block_kv = prod(s_kv[1:])`` (inner iterations per visit ``kv0``).
+``head_dim`` is a workload dimension — it shapes the working set, the
+MXU calls and the cache keys — but is not factored: the kernel keeps
+full heads resident.
+
+All MDP machinery (product-preserving double/halve actions, neighbors,
+enumeration, sampling, transplant warm starts) is inherited from
+:class:`~repro.core.space.FactoredSearchSpace`; this module fixes the
+state dataclass, the attention featurization, and the VMEM working-set
+model that mirrors the kernel's scratch layout (K/V resident per grid
+cell, f32 accumulator + running max/sum per q block).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from .space import FactoredSearchSpace, register_state_type
+
+__all__ = ["FlashScheduleState", "FlashAttnConfigSpace"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FlashScheduleState:
+    """One flash-attention schedule ``s = [s_q, s_kv]``."""
+
+    q: tuple[int, ...]
+    kv: tuple[int, ...]
+
+    # -- kernel mapping ------------------------------------------------------
+    @property
+    def n_q_blocks(self) -> int:
+        """Parallel grid cells along the q sequence."""
+        return self.q[0]
+
+    @property
+    def n_kv_blocks(self) -> int:
+        """Inner-loop iterations per full kv sweep."""
+        return self.kv[0]
+
+    @property
+    def block_q(self) -> int:
+        return math.prod(self.q[1:]) if len(self.q) > 1 else 1
+
+    @property
+    def block_kv(self) -> int:
+        return math.prod(self.kv[1:]) if len(self.kv) > 1 else 1
+
+    def dims(self) -> tuple[int, int]:
+        return (math.prod(self.q), math.prod(self.kv))
+
+    def as_lists(self) -> list[list[int]]:
+        return [list(self.q), list(self.kv)]
+
+    @staticmethod
+    def from_lists(lists: Sequence[Sequence[int]]) -> "FlashScheduleState":
+        q, kv = lists
+        return FlashScheduleState(tuple(q), tuple(kv))
+
+    def key(self) -> str:
+        return ",".join(map(str, self.q)) + "|" + ",".join(map(str, self.kv))
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        return f"[q{list(self.q)} x kv{list(self.kv)}]"
+
+
+class FlashAttnConfigSpace(FactoredSearchSpace):
+    """Search space for one attention workload
+    ``(seq_q, seq_kv, head_dim)`` with nesting depths ``(d_q, d_kv)``
+    (default 2: one grid factor + one block factor per sequence, the
+    kernel's actual degrees of freedom)."""
+
+    op = "flash"
+
+    def __init__(
+        self,
+        seq_q: int,
+        seq_kv: int,
+        head_dim: int,
+        d_q: int = 2,
+        d_kv: int = 2,
+        causal: bool = True,
+        extra_constraint: Optional[Callable[[FlashScheduleState], bool]] = None,
+    ):
+        if min(seq_q, seq_kv, head_dim) < 1:
+            raise ValueError(
+                f"bad attention dims ({seq_q},{seq_kv},{head_dim})"
+            )
+        self.seq_q, self.seq_kv, self.head_dim = seq_q, seq_kv, head_dim
+        self.d_q, self.d_kv = d_q, d_kv
+        self.causal = causal
+        super().__init__((seq_q, seq_kv), (d_q, d_kv), extra_constraint)
+
+    # -- identity ------------------------------------------------------------
+    @property
+    def dims(self) -> tuple[int, int, int]:
+        # head_dim is part of the workload identity (cache keys, warm
+        # starts must never cross head sizes) even though it is not a
+        # factored row
+        return (self.seq_q, self.seq_kv, self.head_dim)
+
+    def spec_kwargs(self) -> Optional[dict]:
+        kw = super().spec_kwargs()
+        if kw is None:
+            return None
+        return {**kw, "causal": self.causal}
+
+    def state_from_rows(self, rows: Sequence[Sequence[int]]) -> FlashScheduleState:
+        return FlashScheduleState.from_lists(rows)
+
+    # -- hardware footprint ---------------------------------------------------
+    def working_set_bytes(self, s: FlashScheduleState, in_bytes: int = 2) -> int:
+        """Mirror of the kernel's VMEM layout: the q block and the fully
+        resident K/V (its BlockSpec streams whole sequences per grid
+        cell), the f32 accumulator + logits tile, and running max/sum."""
+        bq, bkv = s.block_q, s.block_kv
+        hd = self.head_dim
+        return (
+            (bq * hd + 2 * self.seq_kv * hd) * in_bytes
+            + bq * hd * 4  # f32 accumulator
+            + bq * bkv * 4  # logits/probability tile
+            + 2 * bq * 4  # running max + sum
+        )
+
+    # -- featurization --------------------------------------------------------
+    def features(self, s: FlashScheduleState) -> np.ndarray:
+        """log2 of every factor plus derived schedule descriptors — the
+        flash analogue of the GEMM tile features the learned tuners
+        consume."""
+        lg = lambda v: math.log2(max(v, 1))
+        raw = [lg(f) for f in (s.q + s.kv)]
+        bq, bkv = s.block_q, s.block_kv
+        derived = [
+            lg(bq),
+            lg(bkv),
+            lg(s.n_q_blocks),
+            lg(s.n_kv_blocks),
+            float(bq % 8 == 0),  # sublane-aligned q block
+            float(bkv % 128 == 0),  # lane-aligned kv block
+            lg(bq * bkv),  # logits tile (elements)
+            lg(self.working_set_bytes(s)),
+        ]
+        return np.asarray(raw + derived, dtype=np.float32)
+
+    @property
+    def n_features(self) -> int:
+        return self.d_q + self.d_kv + 8
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (
+            f"FlashAttnConfigSpace(({self.seq_q},{self.seq_kv},"
+            f"{self.head_dim}), d=({self.d_q},{self.d_kv}), "
+            f"causal={self.causal}, size={self.size()})"
+        )
+
+
+register_state_type("flash", FlashScheduleState)

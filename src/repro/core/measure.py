@@ -43,7 +43,7 @@ import dataclasses
 import math
 from typing import Optional, Sequence
 
-from .config_space import TilingState
+from .space import State
 from .cost.base import CostBackend
 from .executor import LaneExecutor, SimulatedExecutor
 from .records import TrialJournal
@@ -55,7 +55,7 @@ __all__ = ["MeasureEngine", "MeasureOutcome", "MeasureStats"]
 class MeasureOutcome:
     """One measured (or cache-served) state."""
 
-    state: TilingState
+    state: State
     cost: float
     cache_hit: bool
     lane_s: float  # lane occupancy: simulated model or measured wall
@@ -108,8 +108,10 @@ class MeasureStats:
 
 
 class MeasureEngine:
-    """Measures batches of :class:`TilingState` on a cost backend with
-    ``n_workers`` parallel lanes and an optional persistent trial cache."""
+    """Measures batches of schedule states on a cost backend with
+    ``n_workers`` parallel lanes and an optional persistent trial cache.
+    Journal traffic is scoped to the backend's op, so engines for
+    different operators can share one journal file safely."""
 
     def __init__(
         self,
@@ -161,7 +163,7 @@ class MeasureEngine:
         )
 
     # -- dispatch ------------------------------------------------------------
-    def measure_wave(self, states: Sequence[TilingState]) -> list[MeasureOutcome]:
+    def measure_wave(self, states: Sequence[State]) -> list[MeasureOutcome]:
         """Measure up to ``n_workers`` states as one concurrent wave.
 
         Journal hits are served without touching the backend and occupy a
@@ -184,7 +186,9 @@ class MeasureEngine:
         for i, s in enumerate(states):
             cached = None
             if self.journal is not None and self.journal_key is not None:
-                cached = self.journal.get(self.journal_key, s.key())
+                cached = self.journal.get(
+                    self.journal_key, s.key(), op=self.backend.op
+                )
             if cached is not None:
                 outcomes[i] = MeasureOutcome(s, cached, True, 0.0)
             else:
@@ -220,7 +224,9 @@ class MeasureEngine:
                     # must not be cached as "this config is infeasible"
                     self.stats.n_failures += 1
                 elif self.journal is not None and self.journal_key is not None:
-                    self.journal.record(self.journal_key, s, lane.cost)
+                    self.journal.record(
+                        self.journal_key, s, lane.cost, op=self.backend.op
+                    )
         done = [o for o in outcomes if o is not None]
         self.stats.n_dispatched += len(miss_idx)
         self.stats.n_cache_hits += len(states) - len(miss_idx)

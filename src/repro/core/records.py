@@ -26,15 +26,19 @@ import re
 import tempfile
 import threading
 import time
-from typing import Iterable, Optional
+from typing import Iterable, Optional, Sequence
 
-from .config_space import TilingState
+from .space import State, state_from_lists
 
 __all__ = [
     "TuningRecords",
     "TrialJournal",
     "workload_key",
+    "workload_key_for",
     "parse_workload_key",
+    "parse_workload_key_generic",
+    "op_of_workload_key",
+    "donor_distance",
     "compile_cache_dir_for",
     "global_records",
     "set_global_records",
@@ -50,20 +54,91 @@ def compile_cache_dir_for(journal_path: str) -> str:
     return journal_path + ".xlacache"
 
 
+def workload_key_for(op: str, dims: Sequence[int], dtype: str = "bfloat16",
+                     backend: str = "analytical_tpu_v5e") -> str:
+    """Persistent-store key for one op workload.  GEMM keeps its legacy
+    ``gemm/m{M}k{K}n{N}/...`` spelling bit-for-bit (old records files and
+    journals stay valid); every other op gets the generic
+    ``{op}/{d0}x{d1}x../{dtype}/{backend}`` form.  Either way the key
+    leads with the op, so cross-op rows can never collide."""
+    if op == "gemm":
+        m, k, n = dims
+        return f"gemm/m{m}k{k}n{n}/{dtype}/{backend}"
+    return f"{op}/" + "x".join(str(d) for d in dims) + f"/{dtype}/{backend}"
+
+
 def workload_key(m: int, k: int, n: int, dtype: str = "bfloat16",
                  backend: str = "analytical_tpu_v5e") -> str:
-    return f"gemm/m{m}k{k}n{n}/{dtype}/{backend}"
+    """Back-compat GEMM spelling of :func:`workload_key_for`."""
+    return workload_key_for("gemm", (m, k, n), dtype, backend)
 
 
 _KEY_RE = re.compile(r"^gemm/m(\d+)k(\d+)n(\d+)/([^/]+)/(.+)$")
+_GENERIC_KEY_RE = re.compile(r"^([A-Za-z0-9_-]+)/(\d+(?:x\d+)*)/([^/]+)/(.+)$")
 
 
 def parse_workload_key(key: str) -> Optional[tuple[int, int, int, str, str]]:
-    """Inverse of :func:`workload_key`: ``(m, k, n, dtype, backend)``."""
+    """Inverse of :func:`workload_key`: ``(m, k, n, dtype, backend)``
+    (GEMM keys only; returns None for other ops)."""
     m = _KEY_RE.match(key)
     if m is None:
         return None
     return int(m.group(1)), int(m.group(2)), int(m.group(3)), m.group(4), m.group(5)
+
+
+def parse_workload_key_generic(
+    key: str,
+) -> Optional[tuple[str, tuple[int, ...], str, str]]:
+    """Inverse of :func:`workload_key_for`:
+    ``(op, dims, dtype, backend)`` for any op (legacy GEMM keys
+    included)."""
+    m = _KEY_RE.match(key)
+    if m is not None:
+        return (
+            "gemm",
+            (int(m.group(1)), int(m.group(2)), int(m.group(3))),
+            m.group(4),
+            m.group(5),
+        )
+    g = _GENERIC_KEY_RE.match(key)
+    if g is None:
+        return None
+    dims = tuple(int(x) for x in g.group(2).split("x"))
+    return g.group(1), dims, g.group(3), g.group(4)
+
+
+def donor_distance(
+    parsed: tuple[str, tuple[int, ...], str, str],
+    op: str,
+    dims: Sequence[int],
+    dtype: Optional[str] = None,
+    backend: Optional[str] = None,
+    fixed_tail: int = 0,
+) -> Optional[float]:
+    """THE warm-start donor filter, shared by the records and journal
+    scans: log-shape distance from a parsed donor workload key (see
+    :func:`parse_workload_key_generic`) to ``(op, dims)``, or ``None``
+    when the donor is out of scope — different op, dims arity, trailing
+    identity dims (``fixed_tail``, e.g. flash's head_dim), dtype, or
+    backend."""
+    op2, dims2, dt2, be2 = parsed
+    dims = tuple(dims)
+    if op2 != op or len(dims2) != len(dims):
+        return None
+    if fixed_tail and dims2[-fixed_tail:] != dims[-fixed_tail:]:
+        return None
+    if backend is not None and be2 != backend:
+        return None
+    if dtype is not None and dt2 != dtype:
+        return None
+    return sum(abs(math.log2(a / b)) for a, b in zip(dims2, dims))
+
+
+def op_of_workload_key(key: str) -> str:
+    """The op a workload key (or ``key?fingerprint`` journal key)
+    belongs to; pre-op-registry keys are all GEMM."""
+    op = key.split("/", 1)[0]
+    return op if "/" in key else "gemm"
 
 
 class TuningRecords:
@@ -79,11 +154,15 @@ class TuningRecords:
     def lookup(self, key: str) -> Optional[dict]:
         return self._data.get(key)
 
-    def lookup_state(self, key: str) -> Optional[TilingState]:
+    def lookup_state(self, key: str) -> Optional[State]:
         rec = self.lookup(key)
         if rec is None:
             return None
-        return TilingState.from_lists(rec["state"])
+        op = rec.get("op") or op_of_workload_key(key)
+        try:
+            return state_from_lists(op, rec["state"])
+        except KeyError:  # op's space module not available here
+            return None
 
     def best_cost(self, key: str) -> float:
         rec = self.lookup(key)
@@ -99,7 +178,7 @@ class TuningRecords:
     def update(
         self,
         key: str,
-        state: TilingState,
+        state: State,
         cost: float,
         tuner: str,
         n_trials: int,
@@ -111,6 +190,7 @@ class TuningRecords:
             if old is not None and old["cost"] <= cost:
                 return False
             self._data[key] = {
+                "op": op_of_workload_key(key),
                 "state": state.as_lists(),
                 "cost": cost,
                 "tuner": tuner,
@@ -151,7 +231,11 @@ class TrialJournal:
     which loading skips (and a later :meth:`reload` re-reads once some
     surviving writer completes it).
 
-    The in-memory view is a per-workload cost table plus a running best
+    Rows carry an ``op`` schema field (rows from before the op
+    registry load as ``op="gemm"``); a workload key belongs to
+    exactly one op, and lookups can assert it (:meth:`get` with
+    ``op=``), so a mixed-op journal can never serve a flash row to a
+    GEMM search.  The in-memory view is a per-workload cost table plus a running best
     (state, cost) pair used for warm starts.  :meth:`reload` merges rows
     appended by sibling engines/processes since the last read — the
     multi-engine sharing primitive.  The journal is a context manager;
@@ -164,6 +248,7 @@ class TrialJournal:
         self._lock = threading.Lock()
         self._costs: dict[str, dict[str, float]] = {}
         self._best: dict[str, tuple[float, list]] = {}
+        self._ops: dict[str, str] = {}  # workload -> op (schema guard)
         self._fd: Optional[int] = None
         self._read_pos = 0  # how far reload() has consumed the file
         if path:
@@ -206,7 +291,10 @@ class TrialJournal:
                 try:
                     row = json.loads(line)
                     ingested = self._ingest(
-                        row["w"], row["k"], row["s"], self._row_cost(row)
+                        row["w"], row["k"], row["s"], self._row_cost(row),
+                        # schema field added with the op registry; every
+                        # pre-registry row is a GEMM measurement
+                        op=row.get("op", "gemm"),
                     )
                 except (ValueError, KeyError, TypeError):
                     continue  # torn/foreign line from a crashed writer
@@ -214,7 +302,13 @@ class TrialJournal:
         return n_new
 
     # -- read ------------------------------------------------------------------
-    def get(self, workload: str, state_key: str) -> Optional[float]:
+    def get(self, workload: str, state_key: str,
+            op: Optional[str] = None) -> Optional[float]:
+        """Cached cost, or None.  ``op`` (when given) must match the
+        workload's journaled op — a flash row must never be served to a
+        GEMM lookup even if the key strings were ever to collide."""
+        if op is not None and self._ops.get(workload, "gemm") != op:
+            return None
         return self._costs.get(workload, {}).get(state_key)
 
     def n_trials(self, workload: str) -> int:
@@ -226,12 +320,47 @@ class TrialJournal:
     def __len__(self) -> int:
         return sum(len(d) for d in self._costs.values())
 
-    def best_state(self, workload: str) -> Optional[tuple[TilingState, float]]:
+    def op_of(self, workload: str) -> str:
+        return self._ops.get(workload, "gemm")
+
+    def best_state(self, workload: str) -> Optional[tuple[State, float]]:
         rec = self._best.get(workload)
         if rec is None:
             return None
         cost, lists = rec
-        return TilingState.from_lists(lists), cost
+        try:
+            return state_from_lists(self.op_of(workload), lists), cost
+        except KeyError:
+            return None
+
+    def nearest(
+        self,
+        op: str,
+        dims: Sequence[int],
+        dtype: Optional[str] = None,
+        backend: Optional[str] = None,
+        exclude: Optional[str] = None,
+        fixed_tail: int = 0,
+    ) -> Optional[str]:
+        """The previously-journaled workload of ``op`` closest to
+        ``dims`` in log-shape space — the warm-start donor for a new
+        shape.  Donors are scoped to the op: a flash schedule can never
+        seed a GEMM search.  ``fixed_tail`` is the count of trailing
+        dims that are workload identity rather than factored rows
+        (``SearchSpace.n_fixed_dims``): donors must match them exactly
+        (e.g. flash's head_dim)."""
+        best_key, best_d = None, math.inf
+        for key in self._costs:
+            if key == exclude or key not in self._best:
+                continue
+            parsed = parse_workload_key_generic(key)
+            if parsed is None or self.op_of(key) != op:
+                continue
+            d = donor_distance(parsed, op, dims, dtype=dtype,
+                               backend=backend, fixed_tail=fixed_tail)
+            if d is not None and d < best_d:
+                best_key, best_d = key, d
+        return best_key
 
     def nearest_workload(
         self,
@@ -242,32 +371,19 @@ class TrialJournal:
         backend: Optional[str] = None,
         exclude: Optional[str] = None,
     ) -> Optional[str]:
-        """The previously-journaled workload closest to ``(m, k, n)`` in
-        log-shape space — the warm-start donor for a new shape."""
-        best_key, best_d = None, math.inf
-        for key in self._costs:
-            if key == exclude or key not in self._best:
-                continue
-            parsed = parse_workload_key(key)
-            if parsed is None:
-                continue
-            m2, k2, n2, dt2, be2 = parsed
-            if backend is not None and be2 != backend:
-                continue
-            if dtype is not None and dt2 != dtype:
-                continue
-            d = (
-                abs(math.log2(m2 / m))
-                + abs(math.log2(k2 / k))
-                + abs(math.log2(n2 / n))
-            )
-            if d < best_d:
-                best_key, best_d = key, d
-        return best_key
+        """Back-compat GEMM spelling of :meth:`nearest`."""
+        return self.nearest("gemm", (m, k, n), dtype=dtype, backend=backend,
+                            exclude=exclude)
 
     # -- write -----------------------------------------------------------------
     def _ingest(self, workload: str, state_key: str, state_lists: list,
-                cost: float) -> bool:
+                cost: float, op: str = "gemm") -> bool:
+        known = self._ops.setdefault(workload, op)
+        if known != op:
+            # schema guard: a workload key belongs to exactly one op —
+            # never let a foreign row shadow (or serve) another op's
+            # measurements
+            return False
         table = self._costs.setdefault(workload, {})
         if state_key in table:
             return False
@@ -278,10 +394,13 @@ class TrialJournal:
                 self._best[workload] = (cost, state_lists)
         return True
 
-    def record(self, workload: str, state: TilingState, cost: float) -> None:
+    def record(self, workload: str, state: State, cost: float,
+               op: Optional[str] = None) -> None:
+        if op is None:
+            op = op_of_workload_key(workload)
         with self._lock:
             lists = state.as_lists()
-            if not self._ingest(workload, state.key(), lists, cost):
+            if not self._ingest(workload, state.key(), lists, cost, op=op):
                 return
             if self.path:
                 if self._fd is None:
@@ -290,7 +409,8 @@ class TrialJournal:
                     self._fd = os.open(
                         self.path, os.O_WRONLY | os.O_APPEND | os.O_CREAT, 0o644
                     )
-                row: dict = {"w": workload, "k": state.key(), "s": lists}
+                row: dict = {"w": workload, "k": state.key(), "s": lists,
+                             "op": op}
                 if math.isfinite(cost):
                     row["c"] = cost
                 else:

@@ -1,9 +1,15 @@
-"""Tuning sessions: run one-or-many tuners over one-or-many GEMM
+"""Tuning sessions: run one-or-many tuners over one-or-many operator
 workloads through the batched measurement engine, persist the results,
 and emit comparison tables.
 
 ``TuningSession`` is what `launch/tune.py` and the benchmark harness
-drive.  It owns the two persistence layers — the keep-best
+drive.  It is operator-agnostic: a :class:`Workload` names an op from
+the registry (``repro.core.ops``) plus its dimension sizes, and the
+session resolves the op's search space and analytical oracle through
+that registry — GEMM is just the default op (and ``GemmWorkload``
+remains as the back-compat constructor).
+
+The session owns the two persistence layers — the keep-best
 :class:`TuningRecords` table that `kernels/ops.py` consults at trace
 time, and the append-only :class:`TrialJournal` that the
 :class:`~repro.core.measure.MeasureEngine` serves repeat measurements
@@ -11,10 +17,10 @@ from across sessions — and wires both into every search it launches:
 
 * :meth:`tune_workload` builds a per-workload engine (``n_workers``
   measurement lanes + shared journal) and can **warm-start** the search
-  from the best record of this workload, or — via
-  ``GemmConfigSpace.transplant`` — from the *nearest previously-tuned
-  shape* in log-shape space;
-* :meth:`tune_arch` fans every distinct GEMM an ArchConfig executes
+  from the best record of this workload, or — via the space's
+  ``transplant`` — from the *nearest previously-tuned shape of the same
+  op* in log-shape space;
+* :meth:`tune_arch` fans every distinct workload an ArchConfig executes
   through one shared engine budget: duplicate shapes are tuned once,
   the trial/time budget is a single pool split over the remaining
   workloads, and engine statistics (dispatches, cache hits) aggregate
@@ -30,32 +36,94 @@ import inspect
 import math
 from typing import Callable, Optional, Sequence
 
-from .config_space import GemmConfigSpace, TilingState
-from .cost import AnalyticalTPUCost, CostBackend
+from .cost import CostBackend
 from .executor import LaneExecutor, make_executor
 from .measure import MeasureEngine, MeasureStats
-from .records import TrialJournal, TuningRecords, parse_workload_key, workload_key
+from .records import (
+    TrialJournal,
+    TuningRecords,
+    donor_distance,
+    parse_workload_key_generic,
+    workload_key_for,
+)
+from .space import SearchSpace, State
 from .tuners import TUNERS, Budget, TuneResult
 
-__all__ = ["GemmWorkload", "TuningSession", "ArchTuneReport"]
+__all__ = ["Workload", "GemmWorkload", "TuningSession", "ArchTuneReport"]
 
 
 @dataclasses.dataclass(frozen=True)
-class GemmWorkload:
-    m: int
-    k: int
-    n: int
+class Workload:
+    """One tunable operator instance: op name + dimension sizes (plus
+    nesting depths, defaulted from the op registry)."""
+
+    op: str
+    dims: tuple[int, ...]
     dtype: str = "bfloat16"
-    d_m: int = 4
-    d_k: int = 2
-    d_n: int = 4
+    depths: tuple[int, ...] = ()
     label: str = ""
 
-    def space(self) -> GemmConfigSpace:
-        return GemmConfigSpace(self.m, self.k, self.n, self.d_m, self.d_k, self.d_n)
+    def __post_init__(self):
+        object.__setattr__(self, "dims", tuple(int(d) for d in self.dims))
+        if self.depths:
+            object.__setattr__(
+                self, "depths", tuple(int(d) for d in self.depths)
+            )
+        else:
+            from .ops import get_op  # lazy: ops imports cost modules
+
+            object.__setattr__(self, "depths", get_op(self.op).default_depths)
+
+    # -- GEMM-era accessors (kept so shape-listing code reads naturally) -----
+    @property
+    def m(self) -> int:
+        return self.dims[0]
+
+    @property
+    def k(self) -> int:
+        return self.dims[1]
+
+    @property
+    def n(self) -> int:
+        return self.dims[2]
+
+    @property
+    def d_m(self) -> int:
+        return self.depths[0]
+
+    @property
+    def d_k(self) -> int:
+        return self.depths[1]
+
+    @property
+    def d_n(self) -> int:
+        return self.depths[2]
+
+    def space(self) -> SearchSpace:
+        from .ops import get_op
+
+        return get_op(self.op).make_space(self.dims, self.depths)
 
     def key(self, backend: str) -> str:
-        return workload_key(self.m, self.k, self.n, self.dtype, backend)
+        return workload_key_for(self.op, self.dims, self.dtype, backend)
+
+
+def GemmWorkload(
+    m: int,
+    k: int,
+    n: int,
+    dtype: str = "bfloat16",
+    d_m: int = 4,
+    d_k: int = 2,
+    d_n: int = 4,
+    label: str = "",
+) -> Workload:
+    """Back-compat constructor for the pre-registry GEMM workload type;
+    returns the generic :class:`Workload` with ``op="gemm"``."""
+    return Workload(
+        op="gemm", dims=(m, k, n), dtype=dtype, depths=(d_m, d_k, d_n),
+        label=label,
+    )
 
 
 @dataclasses.dataclass
@@ -86,11 +154,18 @@ class ArchTuneReport:
         return out
 
 
+def _default_cost_factory(space: SearchSpace) -> CostBackend:
+    """The op's analytical oracle, resolved through the registry."""
+    from .ops import get_op
+
+    return get_op(space.op).analytical_cost(space, n_repeats=1)
+
+
 class TuningSession:
     def __init__(
         self,
         records: Optional[TuningRecords] = None,
-        cost_factory: Optional[Callable[[GemmConfigSpace], CostBackend]] = None,
+        cost_factory: Optional[Callable[[SearchSpace], CostBackend]] = None,
         seed: int = 0,
         verbose: bool = True,
         journal: Optional[TrialJournal] = None,
@@ -98,9 +173,7 @@ class TuningSession:
         # NOTE: TuningRecords defines __len__, so an EMPTY store is falsy —
         # `records or TuningRecords()` would silently drop it
         self.records = records if records is not None else TuningRecords()
-        self.cost_factory = cost_factory or (
-            lambda space: AnalyticalTPUCost(space, n_repeats=1)
-        )
+        self.cost_factory = cost_factory or _default_cost_factory
         self.seed = seed
         self.verbose = verbose
         # persistent measurement cache; None disables cross-session serving
@@ -109,58 +182,57 @@ class TuningSession:
     # -- warm start ----------------------------------------------------------
     def warm_start_state(
         self,
-        wl: GemmWorkload,
-        space: GemmConfigSpace,
+        wl: Workload,
+        space: SearchSpace,
         backend_name: str,
         fingerprint: Optional[str] = None,
-    ) -> Optional[TilingState]:
+    ) -> Optional[State]:
         """Initial state for a warm-started search: this workload's own
         best record if one exists, else the best state of the nearest
-        previously-tuned shape transplanted into this space.  Donor scans
-        are scoped to the workload's dtype — a bf16-tuned best must never
-        seed an int8 search, the tile economics differ.  ``fingerprint``
-        scopes the journal search to entries measured under the same
-        backend settings (see ``measure_fingerprint``)."""
+        previously-tuned shape of the *same op* transplanted into this
+        space.  Donor scans are scoped to the workload's op and dtype —
+        a bf16-tuned best must never seed an int8 search (the tile
+        economics differ), and a flash schedule must never seed a GEMM.
+        ``fingerprint`` scopes the journal search to entries measured
+        under the same backend settings (see ``measure_fingerprint``)."""
         wkey = wl.key(backend_name)
         s = self.records.lookup_state(wkey)
         if s is not None and space.is_legitimate(s):
             return s
-        donors: list[tuple[float, str, TilingState]] = []
+        # trailing non-factored dims (e.g. flash's head_dim) are workload
+        # identity: a donor tuned for a different value has different
+        # VMEM/MXU economics and must never seed this search
+        n_fixed = space.n_fixed_dims
+        donors: list[tuple[float, str, State]] = []
         for key in self.records.keys():
-            parsed = parse_workload_key(key)
+            parsed = parse_workload_key_generic(key)
             if parsed is None or key == wkey:
                 continue
-            m2, k2, n2, dt2, be2 = parsed
-            if be2 != backend_name or dt2 != wl.dtype:
+            d = donor_distance(parsed, wl.op, wl.dims, dtype=wl.dtype,
+                               backend=backend_name, fixed_tail=n_fixed)
+            if d is None:
                 continue
             src = self.records.lookup_state(key)
             if src is None:
                 continue
-            d = (
-                abs(math.log2(m2 / wl.m))
-                + abs(math.log2(k2 / wl.k))
-                + abs(math.log2(n2 / wl.n))
-            )
             donors.append((d, key, src))
         if self.journal is not None:
             jbackend = (
                 backend_name if fingerprint is None else f"{backend_name}?{fingerprint}"
             )
-            near = self.journal.nearest_workload(
-                wl.m, wl.k, wl.n, dtype=wl.dtype, backend=jbackend,
+            near = self.journal.nearest(
+                wl.op, wl.dims, dtype=wl.dtype, backend=jbackend,
                 exclude=wkey if fingerprint is None else f"{wkey}?{fingerprint}",
+                fixed_tail=n_fixed,
             )
             if near is not None:
                 best = self.journal.best_state(near)
-                parsed = parse_workload_key(near)
+                parsed = parse_workload_key_generic(near)
                 if best is not None and parsed is not None:
-                    m2, k2, n2 = parsed[0], parsed[1], parsed[2]
-                    d = (
-                        abs(math.log2(m2 / wl.m))
-                        + abs(math.log2(k2 / wl.k))
-                        + abs(math.log2(n2 / wl.n))
-                    )
-                    donors.append((d, near, best[0]))
+                    d = donor_distance(parsed, wl.op, wl.dims,
+                                       fixed_tail=n_fixed)
+                    if d is not None:
+                        donors.append((d, near, best[0]))
         for d, _key, src in sorted(donors, key=lambda t: (t[0], t[1])):
             s = space.transplant(src)
             if s is not None:
@@ -170,7 +242,7 @@ class TuningSession:
     # -- single workload -----------------------------------------------------
     def tune_workload(
         self,
-        wl: GemmWorkload,
+        wl: Workload,
         tuner_name: str = "g-bfs",
         budget: Optional[Budget] = None,
         tuner_kwargs: Optional[dict] = None,
@@ -243,22 +315,22 @@ class TuningSession:
         budget: Optional[Budget] = None,
         n_workers: int = 1,
         warm_start: bool = False,
-        workloads: Optional[Sequence[GemmWorkload]] = None,
+        workloads: Optional[Sequence[Workload]] = None,
         tuner_kwargs: Optional[dict] = None,
         executor: Optional[LaneExecutor | str] = None,
         reload_every: int = 0,
     ) -> ArchTuneReport:
-        """Tune every distinct GEMM an architecture executes through one
-        shared engine configuration and one shared budget pool.
+        """Tune every distinct workload an architecture executes through
+        one shared engine configuration and one shared budget pool.
 
         ``budget.max_trials`` / ``max_time_s`` are treated as the TOTAL
         across the arch — a hard ceiling: each remaining workload is
         allocated an equal share of whatever is left, capped at the
         remainder, so the sum over workloads can never exceed the pool
         (``max_fraction`` stays per-workload, being space-relative).
-        Workloads with identical ``(m, k, n, dtype)`` are tuned once and
-        share the result; all engines share the session journal and one
-        :class:`MeasureStats`, so the report can attribute the
+        Workloads with identical ``(op, dims, dtype)`` are tuned once
+        and share the result; all engines share the session journal and
+        one :class:`MeasureStats`, so the report can attribute the
         arch-level speedup to lanes vs cache.
 
         ``executor`` selects how measurement lanes run — a
@@ -279,10 +351,10 @@ class TuningSession:
             workloads = workloads_for_arch(arch, shape)
         budget = budget or Budget(max_fraction=0.001)
         stats = MeasureStats()
-        unique: dict[tuple, GemmWorkload] = {}
+        unique: dict[tuple, Workload] = {}
         labels: dict[tuple, list[str]] = {}
         for i, wl in enumerate(workloads):
-            shape_key = (wl.m, wl.k, wl.n, wl.dtype, wl.d_m, wl.d_k, wl.d_n)
+            shape_key = (wl.op, wl.dims, wl.dtype, wl.depths)
             unique.setdefault(shape_key, wl)
             labels.setdefault(shape_key, []).append(wl.label or f"wl{i}")
         results: dict[str, TuneResult] = {}
@@ -351,7 +423,7 @@ class TuningSession:
 
     def compare(
         self,
-        wl: GemmWorkload,
+        wl: Workload,
         tuner_names: Sequence[str],
         budget: Budget,
         n_seeds: int = 1,

@@ -36,7 +36,7 @@ import random
 import time
 from typing import Optional, Sequence
 
-from ..config_space import GemmConfigSpace, TilingState
+from ..space import SearchSpace, State
 from ..cost.base import CostBackend
 from ..measure import MeasureEngine
 
@@ -60,7 +60,7 @@ class Budget:
 
 @dataclasses.dataclass
 class Trial:
-    state: TilingState
+    state: State
     cost: float
     index: int
     clock_s: float  # simulated search clock at measurement time
@@ -69,7 +69,7 @@ class Trial:
 @dataclasses.dataclass
 class TuneResult:
     tuner: str
-    best_state: Optional[TilingState]
+    best_state: Optional[State]
     best_cost: float
     trials: list[Trial]
     n_trials: int
@@ -112,7 +112,7 @@ class TuningContext:
 
     def __init__(
         self,
-        space: GemmConfigSpace,
+        space: SearchSpace,
         cost: CostBackend,
         budget: Budget,
         overhead_s: Optional[float] = None,
@@ -126,7 +126,7 @@ class TuningContext:
         self.max_trials = budget.resolve_trials(space.size())
         self.visited: dict[str, float] = {}
         self.trials: list[Trial] = []
-        self.best_state: Optional[TilingState] = None
+        self.best_state: Optional[State] = None
         self.best_cost = math.inf
         self.clock_s = 0.0
         if engine is None:
@@ -167,7 +167,7 @@ class TuningContext:
         self.wall_start = time.monotonic()
 
     # -- paper bookkeeping ---------------------------------------------------
-    def seen(self, s: TilingState) -> bool:
+    def seen(self, s: State) -> bool:
         return s.key() in self.visited
 
     def done(self) -> bool:
@@ -177,7 +177,7 @@ class TuningContext:
             return True
         return False
 
-    def measure_many(self, states: Sequence[TilingState]) -> list[float]:
+    def measure_many(self, states: Sequence[State]) -> list[float]:
         """Measure a candidate batch; returns costs aligned with ``states``.
 
         Already-visited states (and intra-batch duplicates) are served
@@ -187,7 +187,7 @@ class TuningContext:
         path on the clock.  Raises :class:`BudgetExhausted` when the
         budget runs out mid-batch (the already-measured prefix is kept).
         """
-        fresh: list[TilingState] = []
+        fresh: list[State] = []
         fresh_keys: set[str] = set()
         for s in states:
             key = s.key()
@@ -210,7 +210,7 @@ class TuningContext:
             i += len(wave)
         return [self.visited[s.key()] for s in states]
 
-    def measure(self, s: TilingState) -> float:
+    def measure(self, s: State) -> float:
         """Single-state convenience wrapper over :meth:`measure_many`."""
         return self.measure_many([s])[0]
 
@@ -234,7 +234,7 @@ class TuningContext:
 class Tuner(abc.ABC):
     name: str = "tuner"
 
-    def __init__(self, space: GemmConfigSpace, cost: CostBackend, seed: int = 0):
+    def __init__(self, space: SearchSpace, cost: CostBackend, seed: int = 0):
         self.space = space
         self.cost = cost
         self.seed = seed

@@ -20,7 +20,7 @@ from __future__ import annotations
 import itertools
 import math
 
-from ..config_space import TilingState
+from ..space import State
 from .base import Tuner, TuningContext
 
 __all__ = ["RandomTuner", "GridTuner", "AnnealingTuner", "GeneticTuner"]
@@ -31,7 +31,7 @@ class RandomTuner(Tuner):
 
     def run(self, ctx: TuningContext) -> None:
         while not ctx.done():
-            wave: list[TilingState] = []
+            wave: list[State] = []
             keys: set[str] = set()
             attempts = 0
             want = max(1, ctx.n_workers)
@@ -126,7 +126,7 @@ class AnnealingTuner(Tuner):
 
 class GeneticTuner(Tuner):
     """GA over exponent vectors; mutation = one MDP move, crossover =
-    per-dimension factor-list swap (keeps products exact)."""
+    per-dimension-row factor-list swap (keeps products exact)."""
 
     name = "genetic"
 
@@ -135,19 +135,22 @@ class GeneticTuner(Tuner):
         super().__init__(space, cost, seed)
         self.pop_size, self.elite, self.mut_p = pop, elite, mut_p
 
-    def _crossover(self, a: TilingState, b: TilingState) -> TilingState:
+    def _crossover(self, a: State, b: State) -> State:
         rows_a, rows_b = a.as_lists(), b.as_lists()
-        child = [rows_a[d] if self.rng.random() < 0.5 else rows_b[d] for d in range(3)]
-        return TilingState.from_lists(child)
+        child = [
+            rows_a[d] if self.rng.random() < 0.5 else rows_b[d]
+            for d in range(len(rows_a))
+        ]
+        return self.space.state_from_lists(child)
 
-    def _mutate(self, s: TilingState) -> TilingState:
+    def _mutate(self, s: State) -> State:
         neigh = self.space.neighbors(s)
         return self.rng.choice(neigh) if neigh else s
 
     def _measure_fresh(self, ctx: TuningContext,
-                       cands: list[TilingState]) -> list[tuple[float, TilingState]]:
+                       cands: list[State]) -> list[tuple[float, State]]:
         """Batch-measure the unvisited, intra-batch-unique candidates."""
-        fresh: list[TilingState] = []
+        fresh: list[State] = []
         keys: set[str] = set()
         for s in cands:
             if not ctx.seen(s) and s.key() not in keys:
@@ -166,7 +169,7 @@ class GeneticTuner(Tuner):
         while not ctx.done():
             pop.sort(key=lambda t: t[0])
             elites = pop[: self.elite]
-            children: list[TilingState] = []
+            children: list[State] = []
             attempts = 0
             while len(children) < self.pop_size and attempts < 20 * self.pop_size:
                 attempts += 1

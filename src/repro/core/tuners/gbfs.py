@@ -17,7 +17,7 @@ import heapq
 import itertools
 from typing import Optional
 
-from ..config_space import TilingState
+from ..space import State
 from .base import Tuner, TuningContext
 
 __all__ = ["GBFSTuner"]
@@ -27,7 +27,7 @@ class GBFSTuner(Tuner):
     name = "g-bfs"
 
     def __init__(self, space, cost, seed: int = 0, rho: int = 5,
-                 s0: Optional[TilingState] = None):
+                 s0: Optional[State] = None):
         super().__init__(space, cost, seed)
         self.rho = rho
         self.s0 = s0
@@ -36,7 +36,7 @@ class GBFSTuner(Tuner):
         s0 = self.s0 or self.space.initial_state()
         c0 = ctx.measure(s0)
         tie = itertools.count()  # stable heap order for equal costs
-        pq: list[tuple[float, int, TilingState]] = [(c0, next(tie), s0)]
+        pq: list[tuple[float, int, State]] = [(c0, next(tie), s0)]
         while pq and not ctx.done():
             cost_s, _, s = heapq.heappop(pq)
             neigh = [s2 for s2 in self.space.neighbors(s) if not ctx.seen(s2)]

@@ -24,7 +24,7 @@ import math
 
 import numpy as np
 
-from ..config_space import TilingState
+from ..space import State
 from .base import BudgetExhausted, Tuner, TuningContext
 
 __all__ = ["GBTTuner", "GradientBoostedTrees"]
@@ -143,8 +143,8 @@ class GBTTuner(Tuner):
         self.n_trees, self.depth = n_trees, depth
         self.refit_every = refit_every
 
-    def _propose_pool(self, ctx: TuningContext) -> list[TilingState]:
-        pool: dict[str, TilingState] = {}
+    def _propose_pool(self, ctx: TuningContext) -> list[State]:
+        pool: dict[str, State] = {}
         for _ in range(self.pool_size):
             s = self.space.random_state(self.rng)
             pool.setdefault(s.key(), s)
@@ -162,7 +162,7 @@ class GBTTuner(Tuner):
         ctx.measure(self.space.initial_state())
         while len(ctx.trials) < self.warmup and not ctx.done():
             want = min(max(1, ctx.n_workers), self.warmup - len(ctx.trials))
-            wave: list[TilingState] = []
+            wave: list[State] = []
             keys: set[str] = set()
             attempts = 0
             while len(wave) < want and attempts < 64 * want:
@@ -197,7 +197,7 @@ class GBTTuner(Tuner):
             feats = np.stack([self.space.features(s) for s in pool])
             pred = model.predict(feats)
             order = np.argsort(pred)
-            batch: list[TilingState] = [pool[i] for i in order[: self.batch_size]]
+            batch: list[State] = [pool[i] for i in order[: self.batch_size]]
             # ε-diversification (AutoTVM's ε-greedy proposal mix)
             n_rand = max(1, int(self.eps_random * len(batch)))
             for _ in range(n_rand):
@@ -205,7 +205,7 @@ class GBTTuner(Tuner):
                     int(order[self.rng.randrange(len(order))])
                 ]
             # 4. measure the surviving batch in one engine round
-            fresh: list[TilingState] = []
+            fresh: list[State] = []
             keys = set()
             for s in batch:
                 if not ctx.seen(s) and s.key() not in keys:

@@ -34,7 +34,7 @@ from typing import Optional
 
 import numpy as np
 
-from ..config_space import TilingState
+from ..space import State
 from .base import BudgetExhausted, Tuner, TuningContext
 
 __all__ = ["NA2CTuner"]
@@ -59,7 +59,7 @@ class NA2CTuner(Tuner):
         replay_cap: int = 4096,
         train_iters: int = 8,
         t_decay: bool = False,
-        s0: Optional[TilingState] = None,
+        s0: Optional[State] = None,
     ):
         super().__init__(space, cost, seed)
         self.T = steps_per_episode
@@ -124,13 +124,13 @@ class NA2CTuner(Tuner):
         self._jax_ready = True
 
     # -- helpers ---------------------------------------------------------------
-    def _action_mask(self, s: TilingState) -> np.ndarray:
+    def _action_mask(self, s: State) -> np.ndarray:
         return np.array(
             [self.space.step(s, a) is not None for a in self.space.actions],
             dtype=bool,
         )
 
-    def _policy_action(self, s: TilingState, mask: np.ndarray) -> int:
+    def _policy_action(self, s: State, mask: np.ndarray) -> int:
         logits = np.asarray(self._policy_logits(self.params, self.space.features(s), mask))
         # sample from the masked softmax
         z = logits - logits.max()
@@ -153,14 +153,14 @@ class NA2CTuner(Tuner):
         while not ctx.done():
             frac = len(ctx.trials) / max(1, ctx.max_trials)
             eps = self.eps0 + (self.eps1 - self.eps0) * frac
-            collected: list[TilingState] = []
+            collected: list[State] = []
             collected_keys: set[str] = set()
-            transitions: list[tuple[TilingState, int, TilingState]] = []
+            transitions: list[tuple[State, int, State]] = []
             # per-episode mask memo: each mask is 26 space.step probes and
             # rollouts + replay revisit the same states repeatedly
             masks: dict[str, np.ndarray] = {}
 
-            def mask_of(s: TilingState) -> np.ndarray:
+            def mask_of(s: State) -> np.ndarray:
                 m = masks.get(s.key())
                 if m is None:
                     m = self._action_mask(s)

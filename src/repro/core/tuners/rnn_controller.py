@@ -2,10 +2,11 @@
 configuration optimization method using a RNN controller by Google
 researchers", i.e. the NAS-style controller of Zoph & Le / Bello et al.).
 
-A GRU emits the tiling configuration as a sequence of categorical
-decisions: for each dimension x in {m, k, n} it distributes the
-power-of-two exponent budget e_x over d_x ordered slots, one slot at a
-time, each choice conditioned on the running remainder via masking.
+A GRU emits the configuration as a sequence of categorical decisions:
+for each dimension row of the space (``space.dim_specs()`` — m/k/n for
+GEMM, q/kv for flash attention) it distributes the power-of-two
+exponent budget e_x over d_x ordered slots, one slot at a time, each
+choice conditioned on the running remainder via masking.
 Sampled configurations are measured; the controller is trained with
 REINFORCE (reward = c_ref / cost, EMA baseline, entropy bonus).
 """
@@ -16,7 +17,7 @@ import math
 
 import numpy as np
 
-from ..config_space import TilingState
+from ..space import State
 from .base import Tuner, TuningContext
 
 __all__ = ["RNNControllerTuner"]
@@ -60,10 +61,10 @@ class RNNControllerTuner(Tuner):
 
         self._jax, self._jnp = jax, jnp
         sp = self.space
+        # one (exponent budget, depth) pair per dimension row — the
+        # op-agnostic decision sequence
         self.budgets = [
-            (_exponent_budget(sp.m), sp.d_m),
-            (_exponent_budget(sp.k), sp.d_k),
-            (_exponent_budget(sp.n), sp.d_n),
+            (_exponent_budget(value), depth) for value, depth in sp.dim_specs()
         ]
         self.max_e = max(b for b, _ in self.budgets)
         # decision sequence: for each dim, d_x - 1 free slots (last is forced)
@@ -126,7 +127,7 @@ class RNNControllerTuner(Tuner):
         self._ready = True
 
     # -- sampling ----------------------------------------------------------------
-    def _sample_config(self) -> tuple[TilingState, np.ndarray, np.ndarray]:
+    def _sample_config(self) -> tuple[State, np.ndarray, np.ndarray]:
         jnp = self._jnp
         h = self.params["gru"]["h0"]
         x = self.params["emb0"]
@@ -153,14 +154,13 @@ class RNNControllerTuner(Tuner):
             )
         for di, (_, d) in enumerate(self.budgets):
             exps[di][d - 1] = remaining[di]
-        dims = (self.space.m, self.space.k, self.space.n)
         rows = []
-        for di, (value, (_, d)) in enumerate(zip(dims, self.budgets)):
+        for di, (value, _depth) in enumerate(self.space.dim_specs()):
             odd = value >> _exponent_budget(value)
             row = [2 ** e for e in exps[di]]
             row[0] *= odd
             rows.append(row)
-        s = TilingState.from_lists(rows)
+        s = self.space.state_from_lists(rows)
         return s, np.asarray(choices, np.int32), np.stack(masks)
 
     # -- REINFORCE loop ------------------------------------------------------------

@@ -1,16 +1,25 @@
-"""Offline GEMM autotuning for an architecture — the paper's technique
-as a first-class framework feature.
+"""Offline operator autotuning — the paper's technique as a first-class
+framework feature, retargeted through the op registry
+(``repro.core.ops``) so any registered operator tunes through the same
+stack.
 
-Extracts every distinct GEMM workload the arch executes at the given
-shape (qkv / attn-out / ffn / experts / lm-head, see
-ArchConfig.gemm_workloads), fans them through one shared measurement
-engine + budget (``TuningSession.tune_arch``), and writes the best
-configs to a TuningRecords JSON that ``kernels/ops.py::gemm`` consults
-at trace time.
+``--op gemm`` (default) extracts every distinct GEMM workload the arch
+executes at the given shape (qkv / attn-out / ffn / experts / lm-head,
+see ArchConfig.gemm_workloads); ``--op flash`` tunes the flash-attention
+kernel's ``(block_q, block_kv)`` schedule for the arch's attention shape
+(or a default 4k/128 shape when no arch is named).  Either way the
+workloads fan through one shared measurement engine + budget
+(``TuningSession.tune_arch``) and the best configs land in a
+TuningRecords JSON that ``kernels/ops.py`` consults at trace time.
 
+  # GEMM, as always
   python -m repro.launch.tune --arch yi-6b --shape train_4k \
       --tuner g-bfs --fraction 0.001 --records records/yi-6b.json \
       --workers 8 --executor process --warm-start
+
+  # flash attention on crash-isolated process lanes
+  python -m repro.launch.tune --op flash --tuner g-bfs --fraction 0.001 \
+      --workers 2 --executor process
 
 ``--workers N`` measures candidate batches on N parallel engine lanes;
 ``--executor`` picks how those lanes run: ``sim`` (default) keeps the
@@ -19,39 +28,50 @@ and ``process`` ships each lane to a persistent worker process with a
 per-lane timeout — a backend crash or hang costs one ``inf`` trial, not
 the session.  ``--warm-start`` seeds each search from this workload's
 previous best record (or the nearest previously-tuned shape of the same
-dtype, transplanted).  Every measurement is journaled next to the
-records file, so re-runs and overlapping shapes are served from cache;
-the journal's append handle is closed when tuning ends.
+op + dtype, transplanted).  Every measurement is journaled next to the
+records file under op-scoped keys, so re-runs and overlapping shapes are
+served from cache; the journal's append handle is closed when tuning
+ends.
 
 ``--cost xla`` swaps the analytical oracle for :class:`XLATimedCost` —
-real timed XLA:CPU programs.  Its compile cost is kept off the hot path:
+real timed XLA:CPU programs built per op by the registry's
+``timed_fn``.  Its compile cost is kept off the hot path:
 ``--n-build-workers`` compiles candidate batches in parallel, and a
 persistent compiled-program cache (``--compile-cache-dir``, default next
-to the journal) lets re-runs and process-lane workers skip compilation
-entirely.  ``--reload-every N`` merges sibling engines' journal rows
-every N waves, so concurrent tuning runs sharing one journal file serve
-each other's fresh measurements mid-search.
+to the journal; content keys carry the op) lets re-runs and process-lane
+workers skip compilation entirely.  ``--reload-every N`` merges sibling
+engines' journal rows every N waves, so concurrent tuning runs sharing
+one journal file serve each other's fresh measurements mid-search.
 """
 
 from __future__ import annotations
 
 import argparse
 import contextlib
+from typing import Optional
 
 from repro.configs.registry import get_arch, get_shape
-from repro.core import Budget, GemmWorkload, TrialJournal, TuningRecords, TuningSession
-from repro.core.cost import AnalyticalTPUCost, XLATimedCost
+from repro.core import (
+    Budget,
+    TrialJournal,
+    TuningRecords,
+    TuningSession,
+    Workload,
+    get_op,
+    op_names,
+)
+from repro.core.cost import XLATimedCost
 from repro.core.executor import EXECUTORS
 from repro.core.records import compile_cache_dir_for
 
 
 def _pad_dim(x: int) -> int:
-    """Round a GEMM dim up so its odd part is small.  The paper's action
-    space only moves powers of two between loop factors, so a large odd
-    part (e.g. 29568 = 2^7·231) pins a >=231-way grid split on that dim;
-    the kernel pads instead — exactly what Pallas BlockSpec padding does
-    on TPU.  Multiples of 2048 keep the odd part <= 15 for every
-    assigned arch while wasting < 7% FLOPs."""
+    """Round a workload dim up so its odd part is small.  The paper's
+    action space only moves powers of two between loop factors, so a
+    large odd part (e.g. 29568 = 2^7·231) pins a >=231-way grid split on
+    that dim; the kernel pads instead — exactly what Pallas BlockSpec
+    padding does on TPU.  Multiples of 2048 keep the odd part <= 15 for
+    every assigned arch while wasting < 7% FLOPs."""
     if x >= 2048:
         return ((x + 2047) // 2048) * 2048
     if x >= 128:
@@ -60,7 +80,7 @@ def _pad_dim(x: int) -> int:
 
 
 def workloads_for_arch(arch_name: str, shape_name: str,
-                       max_tokens: int = 8192) -> list[GemmWorkload]:
+                       max_tokens: int = 8192) -> list[Workload]:
     """Per-arch GEMM list.  Token count is clamped: tiling choices
     saturate well below the full 1M-token batch and the search space for
     the M dimension explodes otherwise (the records are keyed by shape,
@@ -72,22 +92,46 @@ def workloads_for_arch(arch_name: str, shape_name: str,
     for (m, k, n, tag) in cfg.gemm_workloads(1, tokens):
         m = _pad_dim(min(m, max_tokens))
         out.append(
-            GemmWorkload(m, _pad_dim(k), _pad_dim(n), dtype=cfg.compute_dtype,
-                         label=f"{arch_name}/{tag}")
+            Workload(
+                "gemm", (m, _pad_dim(k), _pad_dim(n)),
+                dtype=cfg.compute_dtype, label=f"{arch_name}/{tag}",
+            )
         )
     return out
 
 
+def flash_workloads_for_arch(
+    arch_name: Optional[str], shape_name: str, max_seq: int = 8192
+) -> list[Workload]:
+    """Flash-attention workload list: the arch's causal self-attention
+    shape ``(seq, seq, head_dim)`` at the given training shape, or a
+    default 4k/128 shape when no arch is named."""
+    shape = get_shape(shape_name)
+    seq = _pad_dim(min(shape.seq_len, max_seq))
+    if arch_name is None:
+        head_dim, dtype, label = 128, "bfloat16", f"flash/s{seq}"
+    else:
+        cfg = get_arch(arch_name)
+        head_dim = cfg.resolved_head_dim
+        dtype = cfg.compute_dtype
+        label = f"{arch_name}/flash_s{seq}"
+    return [Workload("flash", (seq, seq, head_dim), dtype=dtype, label=label)]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--op", default="gemm", choices=op_names(),
+                    help="which registered operator to tune")
+    ap.add_argument("--arch", default=None,
+                    help="architecture whose workloads to tune "
+                         "(required for --op gemm)")
     ap.add_argument("--shape", default="train_4k")
     from repro.core.tuners import TUNERS
 
     ap.add_argument("--tuner", default="g-bfs", choices=sorted(TUNERS))
     ap.add_argument("--fraction", type=float, default=0.001)
     ap.add_argument("--max-trials", type=int, default=None,
-                    help="TOTAL trial pool shared across the arch's workloads")
+                    help="TOTAL trial pool shared across the workloads")
     ap.add_argument("--records", default="records/tuning.json")
     ap.add_argument("--noise", type=float, default=0.05)
     ap.add_argument("--seed", type=int, default=0)
@@ -102,7 +146,7 @@ def main() -> None:
                     help="trial-journal path (default: <records>.journal.jsonl; "
                          "'none' disables the persistent cache)")
     ap.add_argument("--cost", default="analytical", choices=["analytical", "xla"],
-                    help="cost oracle: the analytical TPU model, or real "
+                    help="cost oracle: the op's analytical TPU model, or real "
                          "timed XLA:CPU programs (XLATimedCost)")
     ap.add_argument("--n-build-workers", type=int, default=4,
                     help="parallel XLA compile threads per backend "
@@ -116,6 +160,15 @@ def main() -> None:
                          "measurement waves (mid-search cache sharing "
                          "between concurrent runs; 0 disables)")
     args = ap.parse_args()
+
+    if args.op == "gemm":
+        if args.arch is None:
+            ap.error("--op gemm needs --arch (whose GEMMs to tune)")
+        workloads = workloads_for_arch(args.arch, args.shape)
+    elif args.op == "flash":
+        workloads = flash_workloads_for_arch(args.arch, args.shape)
+    else:  # a future registered op: tune its default workload list
+        ap.error(f"--op {args.op} has no workload lister wired up yet")
 
     journal_path = args.journal
     if journal_path is None:
@@ -145,7 +198,8 @@ def main() -> None:
             )
     else:
         def cost_factory(space):
-            return AnalyticalTPUCost(
+            # the op's own analytical oracle, resolved via the registry
+            return get_op(space.op).analytical_cost(
                 space, n_repeats=3, noise_sigma=args.noise, seed=args.seed
             )
 
@@ -159,7 +213,7 @@ def main() -> None:
     budget = Budget(max_fraction=args.fraction, max_trials=args.max_trials)
     with journal if journal is not None else contextlib.nullcontext():
         report = session.tune_arch(
-            workloads=workloads_for_arch(args.arch, args.shape),
+            workloads=workloads,
             tuner_name=args.tuner,
             budget=budget,
             n_workers=args.workers,
@@ -169,7 +223,7 @@ def main() -> None:
         )
     print(
         f"[tune] wrote {len(records)} records to {args.records} "
-        f"(workers={report.n_workers} executor={args.executor} "
+        f"(op={args.op} workers={report.n_workers} executor={args.executor} "
         f"cache_hit={report.stats.cache_hit_rate():.2f} "
         f"compile_cache_hit={report.stats.compile_cache_hit_rate():.2f} "
         f"compiles={report.stats.n_compiles} "

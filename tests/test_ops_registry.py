@@ -1,0 +1,371 @@
+"""The operator registry and the flash op riding the full tuner stack:
+op-scoped journal/record keys, cross-op isolation, back-compat GEMM
+aliases, process-shippable backends (including PallasInterpretCost),
+and the ``--op flash`` tune CLI end-to-end."""
+
+import json
+import math
+import sys
+
+import pytest
+
+from repro.core import (
+    Budget,
+    FlashAnalyticalCost,
+    FlashAttnConfigSpace,
+    FlashScheduleState,
+    GBFSTuner,
+    GemmConfigSpace,
+    GemmWorkload,
+    MeasureEngine,
+    TilingState,
+    TrialJournal,
+    TuningRecords,
+    TuningSession,
+    Workload,
+    get_op,
+    op_names,
+    parse_workload_key_generic,
+    workload_key,
+    workload_key_for,
+)
+from repro.core.cost import AnalyticalTPUCost
+from repro.core.cost.base import backend_from_spec
+
+
+# -- registry ----------------------------------------------------------------
+
+
+def test_registry_has_both_ops():
+    assert {"gemm", "flash"} <= set(op_names())
+    gemm = get_op("gemm")
+    flash = get_op("flash")
+    assert gemm.state_type is TilingState
+    assert flash.state_type is FlashScheduleState
+    assert isinstance(gemm.make_space((64, 64, 64), (4, 2, 4)), GemmConfigSpace)
+    assert isinstance(
+        flash.make_space((256, 256, 64), (2, 2)), FlashAttnConfigSpace
+    )
+    with pytest.raises(KeyError):
+        get_op("conv3d")
+
+
+def test_workload_keys_are_op_scoped_and_gemm_legacy_exact():
+    """GEMM keys keep the pre-registry spelling bit-for-bit; other ops
+    lead with their op name, so keys can never collide across ops."""
+    gk = workload_key_for("gemm", (512, 1024, 2048), "bfloat16", "be")
+    assert gk == "gemm/m512k1024n2048/bfloat16/be" == workload_key(
+        512, 1024, 2048, "bfloat16", "be"
+    )
+    fk = workload_key_for("flash", (4096, 4096, 128), "bfloat16", "be")
+    assert fk == "flash/4096x4096x128/bfloat16/be"
+    assert parse_workload_key_generic(gk) == (
+        "gemm", (512, 1024, 2048), "bfloat16", "be"
+    )
+    assert parse_workload_key_generic(fk) == (
+        "flash", (4096, 4096, 128), "bfloat16", "be"
+    )
+
+
+def test_gemm_workload_alias_is_generic_workload():
+    wl = GemmWorkload(128, 64, 256, dtype="float32", label="x")
+    assert isinstance(wl, Workload)
+    assert (wl.op, wl.dims, wl.depths) == ("gemm", (128, 64, 256), (4, 2, 4))
+    assert (wl.m, wl.k, wl.n) == (128, 64, 256)
+    assert isinstance(wl.space(), GemmConfigSpace)
+
+
+# -- flash cost model --------------------------------------------------------
+
+
+def test_flash_analytical_model_has_structure():
+    space = FlashAttnConfigSpace(4096, 4096, 128)
+    cost = FlashAnalyticalCost(space)
+    s0 = space.initial_state()
+    c0 = cost.cost(s0)
+    assert math.isfinite(c0) and c0 > 0
+    best, bc = cost.optimum()
+    assert bc < c0  # tuning beats the untiled schedule
+    # the VMEM cliff is real: some enumerable state fails to build
+    assert any(math.isinf(cost.cost(s)) for s in space.enumerate())
+    # batch == scalar, per the CostBackend contract
+    states = list(space.enumerate())[:12]
+    assert cost.batch_cost(states) == [cost.cost(s) for s in states]
+
+
+def test_flash_worker_spec_round_trip():
+    space = FlashAttnConfigSpace(512, 512, 64, causal=False)
+    cost = FlashAnalyticalCost(space, n_repeats=2, noise_sigma=0.1, seed=9)
+    spec = cost.worker_spec()
+    assert spec is not None
+    rebuilt = backend_from_spec(spec)
+    assert rebuilt.space.causal is False
+    s = space.random_state(__import__("random").Random(3))
+    assert rebuilt.cost(s) == cost.cost(s)
+    # constraint closures refuse to ship (same policy as GEMM)
+    guarded = FlashAttnConfigSpace(512, 512, 64, extra_constraint=lambda s: True)
+    assert FlashAnalyticalCost(guarded).worker_spec() is None
+
+
+def test_causal_flag_is_measurement_identity():
+    """causal=True/False change every measured value, so journal
+    fingerprints and executable-cache content keys must differ — while
+    default-constructed GEMM spaces (empty spec_kwargs) keep their
+    pre-registry fingerprints, so old journals stay valid."""
+    from repro.core.cost.measured import ExecutableCache
+
+    sc = FlashAttnConfigSpace(256, 256, 64, causal=True)
+    sn = FlashAttnConfigSpace(256, 256, 64, causal=False)
+    s = sc.initial_state()
+    assert FlashAnalyticalCost(sc).cost(s) != FlashAnalyticalCost(sn).cost(s)
+    assert (
+        FlashAnalyticalCost(sc).measure_fingerprint()
+        != FlashAnalyticalCost(sn).measure_fingerprint()
+    )
+    assert ExecutableCache.content_key(
+        sc, "float32", s
+    ) != ExecutableCache.content_key(sn, "float32", s)
+    g = GemmConfigSpace(64, 64, 64)
+    assert (
+        AnalyticalTPUCost(g, n_repeats=2, noise_sigma=0.1, seed=3)
+        .measure_fingerprint()
+        == "r2|noise0.1|seed3|io2.2"
+    )
+
+
+def test_flash_tuner_beats_initial_state():
+    space = FlashAttnConfigSpace(2048, 2048, 128)
+    cost = FlashAnalyticalCost(space)
+    res = GBFSTuner(space, cost, seed=0).tune(Budget(max_trials=40))
+    assert res.best_state is not None
+    assert res.best_cost < cost.cost(space.initial_state())
+
+
+@pytest.mark.parametrize("tuner_name", ["random", "genetic", "sim-anneal",
+                                        "xgboost-like", "grid"])
+def test_baseline_tuners_run_on_flash_space(tuner_name):
+    """Every non-RL tuner runs unmodified against the non-GEMM space —
+    the point of the operator-agnostic protocol."""
+    from repro.core.tuners import TUNERS
+
+    space = FlashAttnConfigSpace(1024, 1024, 128)
+    cost = FlashAnalyticalCost(space)
+    res = TUNERS[tuner_name](space, cost, seed=0).tune(Budget(max_trials=25))
+    assert res.n_trials <= 25
+    assert res.best_state is not None and math.isfinite(res.best_cost)
+
+
+# -- journal op isolation ----------------------------------------------------
+
+
+def test_mixed_op_journal_never_serves_across_ops(tmp_path):
+    """A journal holding rows for BOTH ops serves each engine only its
+    own op's rows — a flash row is never handed to a GEMM lookup (and
+    vice versa), even under handle reloads."""
+    jpath = str(tmp_path / "mixed.jsonl")
+    gspace = GemmConfigSpace(64, 64, 64)
+    fspace = FlashAttnConfigSpace(64, 64, 32)
+    gcost = AnalyticalTPUCost(gspace)
+    fcost = FlashAnalyticalCost(fspace)
+
+    with TrialJournal(jpath) as j:
+        ge = MeasureEngine(gcost, journal=j, workload_key=GemmWorkload(64, 64, 64).key(gcost.name))
+        fe = MeasureEngine(
+            fcost, journal=j,
+            workload_key=Workload("flash", (64, 64, 32)).key(fcost.name),
+        )
+        g_out = ge.measure_wave([gspace.initial_state()])
+        f_out = fe.measure_wave([fspace.initial_state()])
+        assert not g_out[0].cache_hit and not f_out[0].cache_hit
+        # repeat lookups hit only within the op
+        assert ge.measure_wave([gspace.initial_state()])[0].cache_hit
+        assert fe.measure_wave([fspace.initial_state()])[0].cache_hit
+
+    # rows persisted with the op schema field
+    rows = [json.loads(l) for l in open(jpath)]
+    assert {r["op"] for r in rows} == {"gemm", "flash"}
+
+    # a fresh handle reconstructs op-typed states per workload
+    j2 = TrialJournal(jpath)
+    for wkey in j2.workloads():
+        best = j2.best_state(wkey)
+        assert best is not None
+        expected = TilingState if j2.op_of(wkey) == "gemm" else FlashScheduleState
+        assert isinstance(best[0], expected)
+    # op-asserting lookups refuse foreign rows even for matching keys
+    gkey = next(w for w in j2.workloads() if j2.op_of(w) == "gemm")
+    state_key = next(iter(j2._costs[gkey]))
+    assert j2.get(gkey, state_key, op="gemm") is not None
+    assert j2.get(gkey, state_key, op="flash") is None
+
+
+def test_legacy_journal_rows_load_as_gemm(tmp_path):
+    """Rows written before the op schema field (no "op") load as GEMM."""
+    jpath = str(tmp_path / "legacy.jsonl")
+    wkey = workload_key(64, 64, 64)
+    s = GemmConfigSpace(64, 64, 64).initial_state()
+    with open(jpath, "w") as f:
+        f.write(json.dumps({"w": wkey, "k": s.key(), "s": s.as_lists(),
+                            "c": 1.5e-5}) + "\n")
+    j = TrialJournal(jpath)
+    assert j.op_of(wkey) == "gemm"
+    assert j.get(wkey, s.key(), op="gemm") == 1.5e-5
+    assert j.get(wkey, s.key(), op="flash") is None
+    best = j.best_state(wkey)
+    assert best is not None and isinstance(best[0], TilingState)
+
+
+def test_warm_start_scoped_to_op(tmp_path):
+    """A tuned GEMM can never seed a flash search of 'similar' dims, and
+    flash workloads warm-start from their own op's nearest shape."""
+    session = TuningSession(
+        TuningRecords(str(tmp_path / "r.json")), seed=0, verbose=False,
+        journal=TrialJournal(str(tmp_path / "j.jsonl")),
+    )
+    session.tune_workload(GemmWorkload(64, 64, 64), "g-bfs", Budget(max_trials=30))
+    flash_twin = Workload("flash", (64, 64, 64))
+    assert session.warm_start_state(
+        flash_twin, flash_twin.space(), "analytical_tpu_v5e"
+    ) is None
+    # tune one flash shape; a nearby flash shape warm-starts from it
+    session.tune_workload(Workload("flash", (128, 128, 64)), "g-bfs",
+                          Budget(max_trials=30))
+    near = Workload("flash", (256, 256, 64))
+    s0 = session.warm_start_state(near, near.space(), "analytical_tpu_v5e")
+    assert s0 is not None and near.space().is_legitimate(s0)
+    # ...but never across head sizes: head_dim is workload identity, not
+    # a factored row — the seq rows would transplant, so this pins the
+    # fixed-tail donor guard (records AND journal scans)
+    other_head = Workload("flash", (128, 128, 128))
+    assert session.warm_start_state(
+        other_head, other_head.space(), "analytical_tpu_v5e"
+    ) is None
+
+
+# -- session / CLI end-to-end ------------------------------------------------
+
+
+def test_session_tunes_mixed_op_workloads_through_one_pool(tmp_path):
+    """tune_arch fans GEMM and flash workloads through one shared
+    budget pool and records both under op-scoped keys."""
+    records = TuningRecords(str(tmp_path / "rec.json"))
+    session = TuningSession(
+        records, seed=0, verbose=False,
+        journal=TrialJournal(str(tmp_path / "j.jsonl")),
+    )
+    wls = [
+        GemmWorkload(64, 64, 64, label="g"),
+        Workload("flash", (128, 128, 64), label="f"),
+    ]
+    report = session.tune_arch(workloads=wls, budget=Budget(max_trials=40))
+    assert set(report.results) == {"g", "f"}
+    assert report.total_trials <= 40
+    keys = set(records.keys())
+    assert any(k.startswith("gemm/") for k in keys)
+    assert any(k.startswith("flash/") for k in keys)
+    # records deserialize per op
+    for k in keys:
+        s = records.lookup_state(k)
+        assert s is not None
+        expected = TilingState if k.startswith("gemm/") else FlashScheduleState
+        assert isinstance(s, expected)
+
+
+def test_tune_cli_op_flash(tmp_path):
+    """The acceptance command: `--op flash --tuner g-bfs --fraction
+    0.001 --workers 2` completes on the analytical backend and journals
+    trials under flash-scoped keys (sim executor here; process lanes are
+    covered by the slow marker below)."""
+    from repro.launch import tune as tune_mod
+
+    argv = sys.argv
+    sys.argv = [
+        "tune", "--op", "flash", "--tuner", "g-bfs", "--fraction", "1.0",
+        "--max-trials", "30", "--workers", "2",
+        "--records", str(tmp_path / "r.json"),
+    ]
+    try:
+        tune_mod.main()
+    finally:
+        sys.argv = argv
+    rec = TuningRecords(str(tmp_path / "r.json"))
+    assert len(rec) == 1
+    (key,) = rec.keys()
+    assert key.startswith("flash/")
+    assert isinstance(rec.lookup_state(key), FlashScheduleState)
+    journal = TrialJournal(str(tmp_path / "r.json") + ".journal.jsonl")
+    assert len(journal) > 0
+    assert all(journal.op_of(w) == "flash" for w in journal.workloads())
+
+
+@pytest.mark.slow
+def test_tune_cli_op_flash_process_lanes(tmp_path):
+    """The exact acceptance-criteria invocation: flash + process
+    executor, end-to-end on the analytical backend."""
+    from repro.launch import tune as tune_mod
+
+    argv = sys.argv
+    sys.argv = [
+        "tune", "--op", "flash", "--tuner", "g-bfs", "--fraction", "0.001",
+        "--workers", "2", "--executor", "process",
+        "--records", str(tmp_path / "r.json"),
+    ]
+    try:
+        tune_mod.main()
+    finally:
+        sys.argv = argv
+    rec = TuningRecords(str(tmp_path / "r.json"))
+    assert len(rec) == 1 and next(iter(rec.keys())).startswith("flash/")
+
+
+# -- measured backends across ops -------------------------------------------
+
+
+@pytest.mark.slow
+def test_xla_timed_flash_schedule(tmp_path):
+    """XLATimedCost builds and times the flash op via the registry's
+    per-op build, with op-distinct executable-cache keys."""
+    from repro.core.cost.measured import ExecutableCache, XLATimedCost
+
+    fspace = FlashAttnConfigSpace(64, 64, 16)
+    gspace = GemmConfigSpace(64, 64, 16, d_m=2, d_k=2, d_n=2)
+    s = fspace.state_from_rows([[4, 16], [4, 16]])
+    cost = XLATimedCost(fspace, n_repeats=1, cache_dir=str(tmp_path / "xc"))
+    c = cost.cost(s)
+    assert math.isfinite(c) and c > 0
+    assert cost.compile_stats()["compiles"] == 1
+    # op field keeps one shared cache dir collision-free across ops
+    k_flash = ExecutableCache.content_key(fspace, "float32", s)
+    k_gemm = ExecutableCache.content_key(
+        gspace, "float32", gspace.initial_state()
+    )
+    assert k_flash != k_gemm
+    # worker spec round-trips through the registry
+    spec = cost.worker_spec()
+    assert spec is not None and spec[1]["op"] == "flash"
+    rebuilt = backend_from_spec(spec)
+    assert math.isfinite(rebuilt.cost(s))
+
+
+@pytest.mark.slow
+def test_pallas_interpret_worker_spec_round_trip():
+    """PallasInterpretCost is process-shippable now (ROADMAP open item):
+    worker_spec() rebuilds an equivalent backend for both ops."""
+    from repro.core.cost.measured import PallasInterpretCost
+
+    for space in (
+        GemmConfigSpace(32, 32, 32),
+        FlashAttnConfigSpace(64, 64, 16),
+    ):
+        cost = PallasInterpretCost(space, n_repeats=1, seed=2)
+        spec = cost.worker_spec()
+        assert spec is not None
+        rebuilt = backend_from_spec(spec)
+        assert rebuilt.op == space.op
+        assert rebuilt.measure_fingerprint() == cost.measure_fingerprint()
+        s = space.random_state(__import__("random").Random(0))
+        c = rebuilt.cost(s)
+        assert math.isfinite(c) and c > 0
+    # constraint closures refuse to ship
+    guarded = GemmConfigSpace(32, 32, 32, extra_constraint=lambda s: True)
+    assert PallasInterpretCost(guarded, n_repeats=1).worker_spec() is None

@@ -1,0 +1,142 @@
+"""Property-based invariants of the operator-agnostic ``SearchSpace``
+protocol (hypothesis), run against BOTH registered factored spaces —
+the canonical GEMM instance and the flash-attention instance.  Guarded
+with ``pytest.importorskip`` so environments without hypothesis skip
+cleanly instead of erroring at collection (GEMM-only deterministic
+variants live in ``test_config_space.py``)."""
+
+import math
+import random
+
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import FlashAttnConfigSpace, GemmConfigSpace
+from repro.core.space import SearchSpace, State
+
+
+@st.composite
+def gemm_space(draw):
+    em = draw(st.integers(2, 6))
+    ek = draw(st.integers(2, 6))
+    en = draw(st.integers(2, 6))
+    return GemmConfigSpace(2**em, 2**ek, 2**en)
+
+
+@st.composite
+def flash_space(draw):
+    eq = draw(st.integers(2, 8))
+    ekv = draw(st.integers(2, 8))
+    hd = 2 ** draw(st.integers(3, 7))
+    causal = draw(st.booleans())
+    return FlashAttnConfigSpace(2**eq, 2**ekv, hd, causal=causal)
+
+
+@st.composite
+def space_and_state(draw):
+    space = draw(st.one_of(gemm_space(), flash_space()))
+    rng = random.Random(draw(st.integers(0, 10_000)))
+    return space, space.random_state(rng)
+
+
+@given(space_and_state())
+@settings(max_examples=80, deadline=None)
+def test_protocol_surface(pair):
+    """Every space speaks the full SearchSpace protocol and its states
+    speak the State protocol (the operator-agnostic contract every
+    tuner/backend/journal layer programs against)."""
+    space, s = pair
+    assert isinstance(space, SearchSpace)
+    assert isinstance(s, State)
+    assert isinstance(space.op, str) and space.op
+    assert len(space.depths) == len(space.dim_specs())
+    assert space.n_actions == len(space.actions) > 0
+    assert space.size() > 0
+    # serialization round trip (journal / process-lane format)
+    s2 = space.state_from_lists(s.as_lists())
+    assert s2 == s and s2.key() == s.key()
+    assert space.working_set_bytes(s) > 0
+
+
+@given(space_and_state())
+@settings(max_examples=80, deadline=None)
+def test_actions_preserve_dim_products(pair):
+    """Eqn. 6 moves keep every dimension row's product exact (the core
+    legitimacy invariant), for every op."""
+    space, s = pair
+    dims = s.dims()
+    for a in space.actions:
+        s2 = space.step(s, a)
+        if s2 is not None:
+            assert s2.dims() == dims
+            assert space.is_legitimate(s2)
+
+
+@given(space_and_state())
+@settings(max_examples=80, deadline=None)
+def test_neighbor_symmetry(pair):
+    """Every move has an inverse: s' in g(s) implies s in g(s')."""
+    space, s = pair
+    for s2 in space.neighbors(s):
+        back_keys = {b.key() for b in space.neighbors(s2)}
+        assert s.key() in back_keys
+
+
+@given(space_and_state())
+@settings(max_examples=80, deadline=None)
+def test_random_state_legitimate_and_features_consistent(pair):
+    """random_state lands inside the space and features match
+    n_features, finitely, for every op."""
+    space, s = pair
+    assert space.is_legitimate(s)
+    f = space.features(s)
+    assert f.shape == (space.n_features,)
+    assert all(map(math.isfinite, f.tolist()))
+
+
+@given(space_and_state(), st.integers(0, 10_000))
+@settings(max_examples=60, deadline=None)
+def test_transplant_into_sibling_space_is_legitimate(pair, seed2):
+    """Any state transplants legitimately into any other power-of-two
+    space of the SAME op (the warm-start translation)."""
+    space, s = pair
+    rng = random.Random(seed2)
+    if space.op == "gemm":
+        dst = GemmConfigSpace(
+            2 ** rng.randint(2, 7), 2 ** rng.randint(2, 7), 2 ** rng.randint(2, 7)
+        )
+    else:
+        dst = FlashAttnConfigSpace(
+            2 ** rng.randint(2, 9), 2 ** rng.randint(2, 9), 128
+        )
+    s2 = dst.transplant(s)
+    assert s2 is not None
+    assert dst.is_legitimate(s2)
+
+
+@given(space_and_state())
+@settings(max_examples=30, deadline=None)
+def test_cross_op_transplant_refused(pair):
+    """A donor state from another op can never transplant in (the
+    warm-start layer's cross-op guard)."""
+    space, s = pair
+    other = (
+        FlashAttnConfigSpace(256, 256, 64)
+        if space.op == "gemm"
+        else GemmConfigSpace(64, 64, 64)
+    )
+    assert other.transplant(s) is None
+
+
+@given(st.one_of(gemm_space(), flash_space()))
+@settings(max_examples=20, deadline=None)
+def test_enumerate_matches_size_on_small_spaces(space):
+    """size() counts exactly what enumerate() yields (no constraint)."""
+    if space.size() > 3000:
+        return
+    states = list(space.enumerate())
+    assert len(states) == space.size()
+    assert len({s.key() for s in states}) == len(states)
