@@ -10,6 +10,9 @@ CSV per the repo contract, then the full figure protocols:
   measure — real-measurement hot-path throughput (BENCH_measure.json:
             cold vs warm-compile-cache trials/sec, journal replay,
             process lanes)
+  serve  — tune→serve loop (BENCH_serve.json: tuned-record vs heuristic
+           flash dispatch tok/s, AOT warm-restart compile counters,
+           open-loop bucketed serving latency percentiles)
   roofline — dry-run roofline table (if dry-run records exist)
 
 ``python -m benchmarks.run --diff`` compares the working-tree
@@ -18,6 +21,9 @@ previously *committed* one (``git show HEAD:BENCH_measure.json``, or
 ``--diff-base <ref-or-file>``) and exits non-zero when warm trials/sec
 regressed by more than ``--diff-threshold`` (default 20%) — the CI
 smoke gate that turns the per-PR artifact into a tracked history.
+``--diff-serve`` is the same gate over ``BENCH_serve.json`` (stream
+service tok/s plus the warm-restart zero-compile and tuned-dispatch
+counter invariants).
 """
 
 from __future__ import annotations
@@ -30,16 +36,17 @@ import sys
 import time
 
 BENCH_MEASURE = "BENCH_measure.json"
+BENCH_SERVE = "BENCH_serve.json"
 
 
-def _load_baseline(base: str) -> dict:
-    """Baseline BENCH_measure.json: a file path, or a git ref whose
-    committed copy is read via ``git show``."""
+def _load_baseline(base: str, name: str = BENCH_MEASURE) -> dict:
+    """Baseline bench JSON: a file path, or a git ref whose committed
+    copy is read via ``git show``."""
     if os.path.exists(base) and not os.path.isdir(base):
         with open(base) as f:
             return json.load(f)
     blob = subprocess.run(
-        ["git", "show", f"{base}:{BENCH_MEASURE}"],
+        ["git", "show", f"{base}:{name}"],
         capture_output=True, text=True, check=True,
         cwd=os.path.dirname(os.path.abspath(__file__)),
     ).stdout
@@ -83,36 +90,110 @@ def diff_measure(
     return 0
 
 
+def diff_serve(
+    current: str = BENCH_SERVE,
+    base: str = "HEAD",
+    threshold: float = 0.20,
+) -> int:
+    """Serving regression gate over ``BENCH_serve.json``:
+
+    * stream ``service_tok_s`` (saturated engine throughput, pure-XLA
+      policy — the stable timing) must not regress more than
+      ``threshold`` vs the committed baseline;
+    * two noise-free counter invariants must hold in the *current* run
+      regardless of baseline: a warm-restart engine reports zero fresh
+      compiles, and the tuned engine's trace actually consumed a tuning
+      record (``tuned_record_dispatched``).
+    """
+    with open(current) as f:
+        cur = json.load(f)
+    rc = 0
+    if not cur.get("warm_restart", {}).get("zero_fresh_compiles", False):
+        print(
+            "serve-diff,FAIL,warm restart recompiled "
+            f"{cur.get('warm_restart', {}).get('compiles', '?')} executables",
+            file=sys.stderr,
+        )
+        rc = 1
+    if not cur.get("tuned_record_dispatched", False):
+        print(
+            "serve-diff,FAIL,tuned engine trace did not consume a "
+            "tuning record",
+            file=sys.stderr,
+        )
+        rc = 1
+    try:
+        prev = _load_baseline(base, BENCH_SERVE)
+    except (subprocess.CalledProcessError, FileNotFoundError, json.JSONDecodeError):
+        print(f"serve-diff,baseline_missing,{base}")
+        return rc
+    cur_tps = float(cur["stream"]["service_tok_s"])
+    prev_tps = float(prev["stream"]["service_tok_s"])
+    regression = 1.0 - cur_tps / prev_tps if prev_tps > 0 else 0.0
+    print(f"serve-diff,baseline_service_tok_s,{prev_tps}")
+    print(f"serve-diff,current_service_tok_s,{cur_tps}")
+    print(f"serve-diff,regression_frac,{regression:+.3f}")
+    if regression > threshold:
+        print(
+            f"serve-diff,FAIL,stream service tok/s regressed "
+            f"{regression:.1%} > {threshold:.0%} "
+            f"({prev_tps} -> {cur_tps})",
+            file=sys.stderr,
+        )
+        rc = 1
+    elif rc == 0:
+        print(f"serve-diff,OK,within {threshold:.0%}")
+    return rc
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="reduced protocol")
     ap.add_argument(
         "--only", default=None,
-        choices=["fig7", "fig8", "kernel", "measure", "roofline"],
+        choices=["fig7", "fig8", "kernel", "measure", "serve", "roofline"],
     )
     ap.add_argument("--diff", action="store_true",
                     help="diff BENCH_measure.json against the committed "
                          "baseline and exit (no benchmarks are run)")
+    ap.add_argument("--diff-serve", action="store_true",
+                    help="diff BENCH_serve.json against the committed "
+                         "baseline and exit (no benchmarks are run)")
     ap.add_argument("--diff-base", default="HEAD",
-                    help="baseline for --diff: a git ref (committed "
-                         "BENCH_measure.json) or a JSON file path")
+                    help="baseline for --diff/--diff-serve: a git ref "
+                         "(committed bench JSON) or a JSON file path")
     ap.add_argument("--diff-threshold", type=float, default=0.20,
-                    help="max tolerated warm trials/sec regression "
-                         "fraction before --diff fails (default 0.20)")
+                    help="max tolerated throughput regression fraction "
+                         "before --diff/--diff-serve fails (default 0.20)")
     args = ap.parse_args()
 
-    if args.diff:
-        sys.exit(
-            diff_measure(base=args.diff_base, threshold=args.diff_threshold)
-        )
+    if args.diff or args.diff_serve:
+        rc = 0
+        if args.diff:
+            rc |= diff_measure(
+                base=args.diff_base, threshold=args.diff_threshold
+            )
+        if args.diff_serve:
+            rc |= diff_serve(
+                base=args.diff_base, threshold=args.diff_threshold
+            )
+        sys.exit(rc)
 
-    from . import fig7, fig8, kernel_bench, measure_bench, roofline_report
+    from . import (
+        fig7,
+        fig8,
+        kernel_bench,
+        measure_bench,
+        roofline_report,
+        serve_bench,
+    )
 
     jobs = {
         "fig7": lambda: fig7.main(quick=args.quick),
         "fig8": lambda: fig8.main(quick=args.quick),
         "kernel": lambda: kernel_bench.main(quick=args.quick),
         "measure": lambda: measure_bench.main(quick=args.quick),
+        "serve": lambda: serve_bench.main(quick=args.quick),
         "roofline": roofline_report.main,
     }
     if args.only:

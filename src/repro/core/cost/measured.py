@@ -141,11 +141,18 @@ class ExecutableCache:
 
     # -- key/paths -----------------------------------------------------------
     @staticmethod
-    def content_key(space: SearchSpace, dtype: str, state: State) -> str:
+    def content_key(
+        space: SearchSpace, dtype: str, state: State, flavor: str = ""
+    ) -> str:
         """Content key: the compiled program is fully determined by the
         op, its workload dims, dtype, schedule state, and the jax/jaxlib
         (XLA) version that produced it.  The op field keeps one shared
-        cache directory safe across operators."""
+        cache directory safe across operators; ``flavor`` separates
+        program families that would otherwise collide on the same
+        (op, dims, state) — e.g. the interpret-mode Pallas program and
+        the plain-XLA timed program of the same schedule.  The default
+        "" adds nothing, so pre-flavor XLATimedCost disk caches
+        survive."""
         import jax
         import jaxlib
 
@@ -156,8 +163,9 @@ class ExecutableCache:
         # Empty kwargs add nothing, so pre-registry GEMM keys survive.
         kw = getattr(space, "spec_kwargs", dict)() or {}
         extra = "".join(f"/{k}={v!r}" for k, v in sorted(kw.items()))
+        fl = f"/{flavor}" if flavor else ""
         raw = (
-            f"{op}/{dims}/{dtype}/{state.key()}{extra}"
+            f"{op}/{dims}/{dtype}/{state.key()}{extra}{fl}"
             f"/jax{jax.__version__}/jaxlib{jaxlib.__version__}"
         )
         return hashlib.sha256(raw.encode()).hexdigest()[:40]
@@ -484,6 +492,7 @@ class XLATimedCost(CostBackend):
 def _pallas_interpret_from_spec(
     op: str, dims: list, depths: list, space_kwargs: dict,
     n_repeats: int, seed: int,
+    cache_dir: Optional[str] = None, cache_capacity: int = 128,
 ) -> "PallasInterpretCost":
     """Worker-process factory (see ``CostBackend.worker_spec``)."""
     from ..ops import get_op
@@ -492,6 +501,8 @@ def _pallas_interpret_from_spec(
         get_op(op).make_space(tuple(dims), tuple(depths), **space_kwargs),
         n_repeats=n_repeats,
         seed=seed,
+        cache_dir=cache_dir,
+        cache_capacity=cache_capacity,
     )
 
 
@@ -501,28 +512,94 @@ class PallasInterpretCost(CostBackend):
     for GEMM, ``repro.kernels.flash_attention`` for flash).  Process-
     shippable like the other backends: ``worker_spec()`` ships the op
     name + dims, and the worker rebuilds space and operands from the
-    registry."""
+    registry.
+
+    Each candidate program is AOT-compiled once and resolved through the
+    same two-layer :class:`ExecutableCache` that backs
+    :class:`XLATimedCost` — repeats time a pre-compiled executable (one
+    uncounted warm run first), so trace/lower overhead never pollutes
+    the measurement and a ``cache_dir`` lets interpret-mode lanes and
+    later sessions replay prior compiles from disk.  Cache entries carry
+    a ``"pallas_interpret"`` flavor so they can share a directory with
+    XLATimedCost programs of the same schedule without collision."""
 
     name = "pallas_interpret_timed"
+    _FLAVOR = "pallas_interpret"
 
-    def __init__(self, space: SearchSpace, n_repeats: int = 1, seed: int = 0):
+    def __init__(
+        self,
+        space: SearchSpace,
+        n_repeats: int = 1,
+        seed: int = 0,
+        cache_dir: Optional[str] = None,
+        cache_capacity: int = 128,
+    ):
         super().__init__(space, n_repeats)
+        import jax
+
         from ..ops import get_op  # lazy: the registry imports cost modules
 
+        self._jax = jax
         self.seed = seed
         self._opspec = get_op(self.op)
         if self._opspec.pallas_run is None:
             raise ValueError(f"op {self.op!r} has no Pallas kernel binding")
         self._args = self._opspec.timed_operands(space, "float32", seed)
+        self.cache = ExecutableCache(capacity=cache_capacity, cache_dir=cache_dir)
+        self._bad: set[str] = set()  # schedules the kernel refused at trace
+
+    def _ensure(self, s: State):
+        """Resolve the interpret-mode executable for ``s``: memory LRU,
+        then the persistent disk layer, then a fresh AOT compile.  Fresh
+        loads get one uncounted warm run before entering the memory
+        layer.  Raises ValueError when the kernel refuses the
+        schedule."""
+        ckey = ExecutableCache.content_key(
+            self.space, "float32", s, flavor=self._FLAVOR
+        )
+        fn = self.cache.get_mem(ckey)
+        if fn is not None:
+            return fn
+        fn = self.cache.get_disk(ckey)
+        if fn is None:
+            t0 = time.perf_counter()
+            traced = lambda *ops: self._opspec.pallas_run(
+                self.space, s, ops, interpret=True
+            )
+            fn = self._jax.jit(traced).lower(*self._args).compile()
+            self.cache.count_compile(time.perf_counter() - t0)
+            self.cache.put_disk(ckey, fn)
+        fn(*self._args).block_until_ready()  # warm: never timed
+        self.cache.put_mem(ckey, fn)
+        return fn
 
     def cost_once(self, s: State, repeat_idx: int) -> float:
-        try:
-            t0 = time.perf_counter()
-            out = self._opspec.pallas_run(self.space, s, self._args, interpret=True)
-            out.block_until_ready()
-            return time.perf_counter() - t0
-        except ValueError:  # schedule the kernel refuses (bad blocks)
+        skey = s.key()
+        if skey in self._bad:
             return math.inf
+        try:
+            fn = self._ensure(s)
+        except ValueError:  # schedule the kernel refuses (bad blocks)
+            self._bad.add(skey)
+            return math.inf
+        t0 = time.perf_counter()
+        fn(*self._args).block_until_ready()
+        dt = time.perf_counter() - t0
+        self.cache.count_timed()
+        return dt
+
+    def measure_fingerprint(self) -> str:
+        # "aot1": repeats time a pre-compiled executable (trace/lower
+        # excluded) — values are incommensurable with pre-AOT journal
+        # entries, so the fingerprint must not match them.  seed fixes
+        # the operand contents.
+        return (
+            f"r{self.n_repeats}|aot1|seed{self.seed}"
+            + self.space_fingerprint()
+        )
+
+    def compile_stats(self) -> Optional[dict]:
+        return self.cache.stats()
 
     def worker_spec(self):
         space_kwargs = self.space.spec_kwargs()
@@ -537,5 +614,7 @@ class PallasInterpretCost(CostBackend):
                 "space_kwargs": space_kwargs,
                 "n_repeats": self.n_repeats,
                 "seed": self.seed,
+                "cache_dir": self.cache.cache_dir,
+                "cache_capacity": self.cache.capacity,
             },
         )

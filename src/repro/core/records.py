@@ -42,7 +42,29 @@ __all__ = [
     "compile_cache_dir_for",
     "global_records",
     "set_global_records",
+    "add_change_listener",
 ]
+
+
+# -- change notification -------------------------------------------------------
+# Trace-time consumers (kernels/ops.py memoizes its per-shape record
+# lookups) must drop their caches whenever the visible records change:
+# a keep-best update, or the process-global store being swapped for a
+# freshly loaded one.  Listeners must be idempotent and cheap.
+
+_CHANGE_LISTENERS: list = []
+
+
+def add_change_listener(fn) -> None:
+    """Register ``fn()`` to run after any TuningRecords mutation or
+    global-store swap.  Exceptions in listeners propagate — a broken
+    invalidation hook must fail loudly, not serve stale schedules."""
+    _CHANGE_LISTENERS.append(fn)
+
+
+def _notify_change() -> None:
+    for fn in list(_CHANGE_LISTENERS):
+        fn()
 
 
 def compile_cache_dir_for(journal_path: str) -> str:
@@ -199,7 +221,9 @@ class TuningRecords:
                 **(extra or {}),
             }
             self._flush_locked()
-            return True
+        # outside the lock: listeners may read back through this store
+        _notify_change()
+        return True
 
     def _flush_locked(self) -> None:
         if not self.path:
@@ -446,3 +470,4 @@ def global_records() -> TuningRecords:
 def set_global_records(records: TuningRecords) -> None:
     global _GLOBAL
     _GLOBAL = records
+    _notify_change()

@@ -1,0 +1,12 @@
+"""Distributed-execution primitives.
+
+Only the *logical sharding annotation* layer (:mod:`repro.dist.api`)
+ships today: it is what the model zoo (`repro.models.*`) and the serving
+stack consume — ``constrain``/``logical`` no-op outside a mesh context,
+so the same model code runs single-host (tests, serving benches, this
+CPU container) and under a production mesh.  The heavier subsystems the
+trainer references (``sharding`` — full param/opt-state spec derivation,
+``fault`` — failure injection/restarts, ``compress`` — gradient
+compression) are still to come; their tests skip on the specific
+missing submodule.
+"""

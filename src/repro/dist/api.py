@@ -1,0 +1,161 @@
+"""Logical sharding annotations — the model-facing slice of `repro.dist`.
+
+Models never name mesh axes directly; they annotate tensors with
+*logical* dimension names (``constrain(x, logical("dp", "sp", None))``)
+and :class:`MeshRules` maps each logical name to zero or more physical
+mesh axes.  Outside a :func:`mesh_context` every annotation is a no-op,
+which is what lets one model implementation serve tests, the CPU
+serving engine, and a production mesh unchanged.
+
+Resolution (:func:`resolve_spec`) drops any mapping the concrete
+(mesh, shape) pair cannot honor — a logical axis whose physical axes are
+absent from the mesh, or whose combined device count does not divide the
+tensor dimension — so partial meshes degrade to replication instead of
+erroring.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+import threading
+from typing import Optional, Sequence, Union
+
+import jax
+
+__all__ = [
+    "MeshRules",
+    "mesh_context",
+    "current_mesh",
+    "current_rules",
+    "logical",
+    "resolve_spec",
+    "constrain",
+]
+
+#: a logical entry: a name, or None for "replicated along this dim"
+LogicalName = Optional[str]
+#: a physical mapping: one axis name, a tuple of axis names, or None
+Physical = Union[str, tuple, None]
+
+
+def _default_rules() -> dict:
+    return {
+        "dp": ("data",),  # batch / token parallel
+        "sp": "seq",      # sequence parallel (activations)
+        "kv_seq": "seq",  # decode KV cache sequence sharding
+        "tp": "model",    # tensor parallel (vocab/ffn output dims)
+        "expert": "model",  # MoE expert dim rides the model axis
+        "expert_cap": None,
+        "expert_ffn": None,
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    """logical name -> physical mesh axes.  ``get`` returns the mapping
+    (str | tuple | None); unknown names resolve to None (replicate)."""
+
+    overrides: Optional[dict] = None
+
+    def get(self, name: Optional[str]) -> Physical:
+        if name is None:
+            return None
+        table = _default_rules()
+        if self.overrides:
+            table.update(self.overrides)
+        return table.get(name)
+
+
+class _MeshCtx:
+    """Process-global (mesh, rules) stack.  Annotations are trace-time
+    constructs, and traces for one jit happen on one thread, but sibling
+    engines may trace concurrently — guard the stack itself."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._stack: list[tuple] = []
+
+    def push(self, mesh, rules) -> None:
+        with self._lock:
+            self._stack.append((mesh, rules))
+
+    def pop(self) -> None:
+        with self._lock:
+            self._stack.pop()
+
+    def top(self) -> tuple:
+        with self._lock:
+            return self._stack[-1] if self._stack else (None, MeshRules())
+
+
+_CTX = _MeshCtx()
+
+
+@contextlib.contextmanager
+def mesh_context(mesh, rules: Optional[MeshRules] = None):
+    """Activate (mesh, rules) for every ``constrain`` traced inside."""
+    _CTX.push(mesh, rules or MeshRules())
+    try:
+        yield mesh
+    finally:
+        _CTX.pop()
+
+
+def current_mesh():
+    return _CTX.top()[0]
+
+
+def current_rules() -> MeshRules:
+    return _CTX.top()[1]
+
+
+def logical(*names: LogicalName) -> tuple:
+    """Package per-dim logical names (cosmetic, but keeps call sites
+    greppable and leaves room for validation later)."""
+    return names
+
+
+def resolve_spec(
+    names: Sequence[LogicalName],
+    shape: Sequence[int],
+    mesh,
+    rules: MeshRules,
+) -> jax.sharding.PartitionSpec:
+    """Map logical names to a PartitionSpec for a concrete (mesh, shape).
+
+    Per dimension: look up the physical axes, keep only axes present in
+    the mesh, and drop the whole entry when none survive or when the
+    combined axis size does not divide the tensor dim.  Trailing
+    replicated entries are trimmed so specs compare clean."""
+    entries: list[Physical] = []
+    for size, name in zip(shape, names):
+        phys = rules.get(name)
+        if phys is None:
+            entries.append(None)
+            continue
+        axes = phys if isinstance(phys, tuple) else (phys,)
+        axes = tuple(a for a in axes if a in mesh.shape)
+        k = math.prod(mesh.shape[a] for a in axes) if axes else 0
+        if not axes or size % k != 0:
+            entries.append(None)
+        elif isinstance(phys, tuple):
+            entries.append(axes)
+        else:
+            entries.append(axes[0])
+    while entries and entries[-1] is None:
+        entries.pop()
+    return jax.sharding.PartitionSpec(*entries)
+
+
+def constrain(x: jax.Array, names: Sequence[LogicalName]) -> jax.Array:
+    """Sharding annotation: with_sharding_constraint under the active
+    mesh context, identity outside one."""
+    mesh, rules = _CTX.top()
+    if mesh is None:
+        return x
+    spec = resolve_spec(names, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec)
+    )

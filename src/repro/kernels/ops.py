@@ -1,18 +1,33 @@
-"""Public GEMM op: tuning-record-aware dispatch + differentiability.
+"""Record-aware kernel dispatch — the trace-time bridge from tuning
+records to the ops models actually execute.
 
 ``gemm(x, w)`` is what the model stack calls for every projection /
-FFN / expert matmul.  Dispatch policy (trace time, all static):
+FFN / expert matmul; ``models/common.attention_dispatch`` routes long
+self-attention through :func:`flash_schedule`.  Dispatch policy (trace
+time, all static):
 
   1. If the process-global kernel policy disables Pallas (default on this
      CPU-only container, and for full-scale dry-runs where interpret-mode
-     grids would explode the HLO), lower to ``jnp.dot`` — XLA picks its
-     own tiling.  On a real TPU deployment the policy flips on.
-  2. Otherwise look up the tuned config for (M, K, N, dtype) in the
-     global TuningRecords (written by `launch/tune.py`); fall back to the
+     grids would explode the HLO), lower to the pure-XLA path — XLA picks
+     its own tiling.  On a real TPU deployment the policy flips on.
+  2. Otherwise consult the tuned record for the op's workload key
+     (``records.workload_key_for`` under the policy's cost-backend
+     namespace — written by `launch/tune.py`); fall back to the op's
      heuristic default when there is no record, or to XLA when shapes
      don't divide.
 
-The op is differentiable either way: the Pallas path installs a
+The lookup layer is **op-generic and memoized**: any op registered in
+`repro.core.ops` resolves its tuned schedule state through
+:func:`lookup_tuned_state`, keyed ``(op, dims, dtype, backend)``.  The
+memo would otherwise hit the records store on every trace (a single
+``gemm`` trace triggers three lookups: forward + both backward shapes);
+it is invalidated by :func:`set_kernel_policy` and by any records
+mutation/reload (via ``records.add_change_listener``).  Per-op dispatch
+counters (:func:`dispatch_stats`) record — at trace time, so once per
+compiled shape — whether a tuned record, the built-in heuristic, or the
+XLA fallback drove each dispatch; the serving bench surfaces them.
+
+The GEMM op is differentiable either way: the Pallas path installs a
 custom_vjp whose backward passes are themselves tiled GEMMs (dA = g Bᵀ,
 dB = Aᵀ g) so tuned kernels serve training too.
 """
@@ -21,15 +36,27 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.records import global_records, workload_key
+from repro.core.records import add_change_listener, global_records, workload_key_for
 from .gemm import KernelConfig, default_config, gemm_pallas, kernel_config_from_state
 
-__all__ = ["gemm", "KernelPolicy", "set_kernel_policy", "kernel_policy"]
+__all__ = [
+    "gemm",
+    "KernelPolicy",
+    "set_kernel_policy",
+    "kernel_policy",
+    "lookup_tuned_state",
+    "flash_schedule",
+    "invalidate_dispatch_cache",
+    "dispatch_stats",
+    "reset_dispatch_stats",
+    "note_dispatch",
+]
 
 
 @dataclasses.dataclass
@@ -37,6 +64,14 @@ class KernelPolicy:
     use_pallas: bool = False  # flipped on for TPU deployments / kernel tests
     interpret: bool = True  # CPU container: interpret=True is the only mode
     cost_backend: str = "analytical_tpu_v5e"  # records namespace to consult
+    #: ops that consult TuningRecords at trace time; an op not listed
+    #: here always uses its heuristic default (the opt-in knob for
+    #: record-aware dispatch)
+    record_ops: tuple[str, ...] = ("gemm", "flash")
+    #: ops that actually run their Pallas kernel when ``use_pallas`` is
+    #: on — lets a deployment (or bench) enable e.g. the flash kernel
+    #: without routing every projection GEMM through Pallas too
+    pallas_ops: tuple[str, ...] = ("gemm", "flash")
 
 
 _POLICY = KernelPolicy()
@@ -49,18 +84,101 @@ def kernel_policy() -> KernelPolicy:
 def set_kernel_policy(policy: KernelPolicy) -> None:
     global _POLICY
     _POLICY = policy
+    invalidate_dispatch_cache()  # cost_backend / record_ops may differ
+
+
+# -- memoized op-generic record lookup ----------------------------------------
+
+_MISS = object()
+_CACHE_LOCK = threading.Lock()
+_DISPATCH_CACHE: dict[tuple, object] = {}
+_DISPATCH_STATS: dict[str, dict[str, int]] = {}
+_STAT_FIELDS = ("records", "heuristic", "xla", "memo_hits", "store_lookups")
+
+
+def invalidate_dispatch_cache() -> None:
+    """Drop every memoized record lookup (registered as a records change
+    listener, also run on policy swaps)."""
+    with _CACHE_LOCK:
+        _DISPATCH_CACHE.clear()
+
+
+add_change_listener(invalidate_dispatch_cache)
+
+
+def note_dispatch(op: str, source: str) -> None:
+    """Count one trace-time dispatch decision for ``op``:
+    ``source`` in {"records", "heuristic", "xla"} (plus internal
+    memo/store counters)."""
+    with _CACHE_LOCK:
+        per_op = _DISPATCH_STATS.setdefault(
+            op, {f: 0 for f in _STAT_FIELDS}
+        )
+        per_op[source] = per_op.get(source, 0) + 1
+
+
+def dispatch_stats() -> dict[str, dict[str, int]]:
+    with _CACHE_LOCK:
+        return {op: dict(d) for op, d in _DISPATCH_STATS.items()}
+
+
+def reset_dispatch_stats() -> None:
+    with _CACHE_LOCK:
+        _DISPATCH_STATS.clear()
+
+
+def lookup_tuned_state(op: str, dims: tuple, dtype: str):
+    """Tuned schedule :class:`~repro.core.space.State` for one op
+    workload, or None.  Consults the process-global
+    :class:`TuningRecords` under the policy's cost-backend namespace;
+    memoized per ``(op, dims, dtype, backend)`` until records change.
+    Ops opt in via ``KernelPolicy.record_ops``."""
+    if op not in _POLICY.record_ops:
+        return None
+    key = (op, tuple(dims), str(dtype), _POLICY.cost_backend)
+    with _CACHE_LOCK:
+        hit = _DISPATCH_CACHE.get(key, _MISS)
+    if hit is not _MISS:
+        note_dispatch(op, "memo_hits")
+        return hit
+    note_dispatch(op, "store_lookups")
+    st = global_records().lookup_state(
+        workload_key_for(op, tuple(dims), str(dtype), _POLICY.cost_backend)
+    )
+    with _CACHE_LOCK:
+        _DISPATCH_CACHE[key] = st
+    return st
 
 
 def _lookup_config(m: int, k: int, n: int, dtype: str) -> Optional[KernelConfig]:
-    rec = global_records().lookup_state(
-        workload_key(m, k, n, dtype, _POLICY.cost_backend)
-    )
-    if rec is None:
+    """GEMM spelling of the generic lookup: tuned state -> KernelConfig
+    (None when there is no record or the record doesn't map)."""
+    st = lookup_tuned_state("gemm", (m, k, n), dtype)
+    if st is None:
         return None
     try:
-        return kernel_config_from_state(rec)
-    except ValueError:
+        return kernel_config_from_state(st)
+    except (ValueError, AttributeError):  # foreign/unmappable record
         return None
+
+
+def flash_schedule(
+    seq_q: int, seq_kv: int, head_dim: int, dtype: str
+) -> Optional[tuple[int, int]]:
+    """Tuned ``(block_q, block_kv)`` for one flash-attention workload, or
+    None when no record fits.  Blocks must tile the sequences exactly —
+    a record tuned for a different factorization never reaches the
+    kernel."""
+    st = lookup_tuned_state("flash", (seq_q, seq_kv, head_dim), dtype)
+    if st is None:
+        return None
+    try:
+        bq, bkv = st.block_q, st.block_kv
+    except AttributeError:  # foreign record under a flash key
+        return None
+    if bq < 1 or bkv < 1 or seq_q % bq or seq_kv % bkv:
+        return None
+    return bq, bkv
 
 
 def _pallas_ok(m: int, k: int, n: int, cfg: KernelConfig) -> bool:
@@ -121,11 +239,19 @@ def gemm(
     a2 = a.reshape((-1, k))
     m = a2.shape[0]
 
-    enabled = _POLICY.use_pallas if use_pallas is None else use_pallas
+    enabled = (
+        (_POLICY.use_pallas and "gemm" in _POLICY.pallas_ops)
+        if use_pallas is None
+        else use_pallas
+    )
     if enabled:
-        cfg = config or _lookup_config(m, k, n, str(a.dtype)) or default_config(m, k, n)
+        tuned = None if config is not None else _lookup_config(m, k, n, str(a.dtype))
+        cfg = config or tuned or default_config(m, k, n)
         if _pallas_ok(m, k, n, cfg):
+            src = "records" if tuned else ("explicit" if config else "heuristic")
+            note_dispatch("gemm", src)
             out = _gemm_pallas_diff(cfg, _POLICY.interpret, a2, b)
             return out.reshape(lead + (n,))
+        note_dispatch("gemm", "xla")
     out = jnp.dot(a2, b)
     return out.reshape(lead + (n,))

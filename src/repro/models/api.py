@@ -74,10 +74,16 @@ class Model:
         return tf.streaming_lm_loss(self.cfg, params, x, labels, aux)
 
     # -- serving ----------------------------------------------------------------
-    def prefill(self, params, batch, max_len: int):
+    def prefill(self, params, batch, max_len: int, last_idx=None):
+        """``last_idx`` (B,) selects each sequence's last real position
+        for the seed logits (bucket-padded serving); attention families
+        only — SSM/hybrid state would be polluted by pad tokens, so the
+        engine never pads those."""
         c = self.cfg
         if c.family in ("dense", "vlm", "moe", "encdec"):
-            return tf.prefill(c, params, batch, max_len)
+            return tf.prefill(c, params, batch, max_len, last_idx=last_idx)
+        if last_idx is not None:
+            raise ValueError(f"family {c.family} does not support padded prefill")
         if c.family == "ssm":
             return mb.mamba_lm_prefill(c, params, batch, max_len)
         if c.family == "hybrid":

@@ -154,23 +154,35 @@ def _group_q(q: jax.Array, kv: int) -> jax.Array:
 def attention_dispatch(q, k, v, softcap: float = 0.0, chunk_threshold: int = 2048):
     """Policy-aware attention entry point: on a Pallas-enabled deployment
     (kernels/ops.KernelPolicy.use_pallas) long sequences run the Pallas
-    flash-attention kernel; otherwise the pure-JAX paths below (which are
-    also the kernel's correctness oracle)."""
-    from repro.kernels.ops import kernel_policy
+    flash-attention kernel — with the **tuned** ``(block_q, block_kv)``
+    schedule when `launch/tune.py` has recorded one for this
+    ``(seq_q, seq_kv, head_dim, dtype)`` workload (see
+    ``kernels/ops.flash_schedule``), the built-in heuristic blocks when
+    not.  Otherwise the pure-JAX paths below (which are also the
+    kernel's correctness oracle)."""
+    from repro.kernels.ops import flash_schedule, kernel_policy, note_dispatch
 
     b, s, h, hd = q.shape
+    sk = k.shape[1]
     pol = kernel_policy()
     if (
         pol.use_pallas
+        and "flash" in pol.pallas_ops
         and softcap == 0.0
         and s > chunk_threshold
-        and s % 256 == 0
-        and k.shape[1] % 512 == 0
     ):
         from repro.kernels.flash_attention import flash_attention
 
-        return flash_attention(q, k, v, block_q=256, block_k=512,
-                               interpret=pol.interpret)
+        tuned = flash_schedule(s, sk, hd, str(q.dtype))
+        if tuned is not None:
+            note_dispatch("flash", "records")
+            return flash_attention(q, k, v, block_q=tuned[0], block_k=tuned[1],
+                                   interpret=pol.interpret)
+        if s % 256 == 0 and sk % 512 == 0:
+            note_dispatch("flash", "heuristic")
+            return flash_attention(q, k, v, block_q=256, block_k=512,
+                                   interpret=pol.interpret)
+        note_dispatch("flash", "xla")
     if s > chunk_threshold:
         return chunked_causal_attention(q, k, v, softcap=softcap)
     return causal_attention(q, k, v, softcap=softcap)
@@ -259,10 +271,18 @@ def cross_attention(q, k, v, softcap: float = 0.0):
     return causal_attention(q, k, v, softcap=softcap, causal=False)
 
 
-def decode_attention(q, k_cache, v_cache, length, softcap: float = 0.0):
+def decode_attention(q, k_cache, v_cache, length, softcap: float = 0.0,
+                     valid_len=None, prefix_len=None):
     """Single-position attention over a cache (no KV repeat).
 
-    q: (B,1,H,hd); k/v_cache: (B,S_max,KV,hd); length: valid prefix len."""
+    q: (B,1,H,hd); k/v_cache: (B,S_max,KV,hd); length: valid prefix len.
+
+    ``valid_len``/``prefix_len`` support bucket-padded prefill (the
+    serving engine right-pads prompts to a fixed bucket of length
+    ``prefix_len``): cache positions in ``[valid_len[b], prefix_len)``
+    hold pad-token K/V and are masked out per sequence; positions at or
+    beyond ``prefix_len`` are decode appends and stay governed by
+    ``length`` alone."""
     b, sq, h, hd = q.shape
     kv = k_cache.shape[2]
     qg = _group_q(q, kv)
@@ -270,6 +290,9 @@ def decode_attention(q, k_cache, v_cache, length, softcap: float = 0.0):
     logits = _softcap(logits * (1.0 / math.sqrt(hd)), softcap)
     pos = jnp.arange(k_cache.shape[1])
     mask = pos[None, None, None, None, :] < length
+    if valid_len is not None:
+        real = (pos[None, :] < valid_len[:, None]) | (pos[None, :] >= prefix_len)
+        mask = mask & real[:, None, None, None, :]
     logits = jnp.where(mask, logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
     out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v_cache)

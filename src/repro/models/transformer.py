@@ -119,6 +119,8 @@ def attn_apply(
     kv_cache: Optional[dict] = None,
     cache_len: Optional[jax.Array] = None,
     xkv: Optional[jax.Array] = None,
+    valid_len: Optional[jax.Array] = None,
+    prefix_len: Optional[jax.Array] = None,
 ):
     """Self- or cross-attention.  Returns (out, new_kv | None).
 
@@ -154,7 +156,8 @@ def attn_apply(
         kc = constrain(kc, logical(None, "kv_seq", None, None) if b == 1 else logical("dp", None, None, None))
         vc = constrain(vc, logical(None, "kv_seq", None, None) if b == 1 else logical("dp", None, None, None))
         new_kv = {"k": kc, "v": vc}
-        out = cm.decode_attention(q, kc, vc, cache_len + s, softcap=cfg.attn_softcap)
+        out = cm.decode_attention(q, kc, vc, cache_len + s, softcap=cfg.attn_softcap,
+                                  valid_len=valid_len, prefix_len=prefix_len)
     else:
         if not causal:
             out = cm.cross_attention(q, k, v, softcap=cfg.attn_softcap)
@@ -432,12 +435,15 @@ def block_apply(
     cache_len=None,
     cross_kv: Optional[dict] = None,
     enc_out: Optional[jax.Array] = None,
+    valid_len=None,
+    prefix_len=None,
 ):
     """One transformer block.  Returns (x, new_kv, aux)."""
     h = constrain(cm.norm_apply(p["ln1"], x, cfg.norm, cfg.norm_eps),
                   logical("dp", "sp", None))
     a, new_kv = attn_apply(
-        cfg, p["attn"], h, positions, causal=causal, kv_cache=kv_cache, cache_len=cache_len
+        cfg, p["attn"], h, positions, causal=causal, kv_cache=kv_cache,
+        cache_len=cache_len, valid_len=valid_len, prefix_len=prefix_len,
     )
     a = constrain(a, logical("dp", "sp", None))  # reduce-scatter into seq shards
     x = x + a
@@ -690,8 +696,16 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None) -> dict:
     return cache
 
 
-def prefill(cfg: ArchConfig, params: dict, batch: dict, max_len: int):
-    """Run the prompt, return (last_logits, cache)."""
+def prefill(cfg: ArchConfig, params: dict, batch: dict, max_len: int,
+            last_idx: Optional[jax.Array] = None):
+    """Run the prompt, return (last_logits, cache).
+
+    ``last_idx`` (B,) int32, optional: per-sequence index of the last
+    *real* token along the final sequence axis.  The serving engine
+    right-pads prompts into fixed buckets, so the logits that seed
+    decoding must come from each sequence's own last real position, not
+    the bucket's final column.  None keeps the legacy behavior (all
+    sequences end at the last column)."""
     tokens = batch["tokens"]
     b, s = tokens.shape
     x = embed_tokens(cfg, params, tokens)
@@ -707,7 +721,12 @@ def prefill(cfg: ArchConfig, params: dict, batch: dict, max_len: int):
     x, _, kvs = _scan_blocks(
         cfg, params["layers"], x, positions, moe=moe, enc_out=enc_out, collect_kv=True
     )
-    logits = lm_logits(cfg, params, x[:, -1:, :])
+    if last_idx is None:
+        x_last = x[:, -1:, :]
+    else:
+        idx = last_idx.astype(jnp.int32)[:, None, None]  # (B,1,1) -> bcast over d
+        x_last = jnp.take_along_axis(x, idx, axis=1)
+    logits = lm_logits(cfg, params, x_last)
     # build the fixed-size cache from collected per-layer K/V
     cache = init_cache(cfg, b, max_len)
     seq = x.shape[1]
@@ -740,7 +759,18 @@ def decode_step(cfg: ArchConfig, params: dict, cache: dict, tokens: jax.Array):
     b = tokens.shape[0]
     x = embed_tokens(cfg, params, tokens)
     pos = cache["len"]
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    # bucket-padded serving: the engine stashes per-sequence real prompt
+    # lengths (+ the bucket width) in the cache so pad K/V rows are
+    # masked out of every decode step (see cm.decode_attention) and each
+    # sequence's rope/learned position continues from its OWN last real
+    # token, not the bucket boundary — decoded tokens are then
+    # bit-identical to an unpadded run (K/V just live at shifted slots).
+    valid_len = cache.get("valid_len")
+    prefix_len = cache.get("prefill_len")
+    if valid_len is not None:
+        positions = (valid_len[:, None] + (pos - prefix_len)).astype(jnp.int32)
+    else:
+        positions = jnp.full((b, 1), pos, jnp.int32)
     if cfg.pos_embed == "learned":
         x = x + jnp.take(params["pos_table"], positions[:, 0] % params["pos_table"].shape[0], axis=0)[:, None]
     moe = cfg.family == "moe"
@@ -759,6 +789,7 @@ def decode_step(cfg: ArchConfig, params: dict, cache: dict, tokens: jax.Array):
         x2, new_kv, _ = block_apply(
             cfg, layer_p, x, positions, moe=moe, kv_cache=kv, cache_len=pos,
             cross_kv=cross_kv, enc_out=None,
+            valid_len=valid_len, prefix_len=prefix_len,
         )
         k_all = jax.lax.dynamic_update_index_in_dim(k_all, new_kv["k"], li, 0)
         v_all = jax.lax.dynamic_update_index_in_dim(v_all, new_kv["v"], li, 0)

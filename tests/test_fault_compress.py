@@ -11,7 +11,8 @@ import jax
 import jax.numpy as jnp
 
 pytest.importorskip(
-    "repro.dist", reason="repro.dist subsystem not present in this tree yet"
+    "repro.dist.fault",
+    reason="dist fault/compress subsystems not present in this tree yet",
 )
 
 from repro.dist.compress import (

@@ -11,7 +11,8 @@ import pytest
 import jax
 
 pytest.importorskip(
-    "repro.dist", reason="repro.dist subsystem not present in this tree yet"
+    "repro.dist.fault",
+    reason="dist fault subsystem (trainer dependency) not present in this tree yet",
 )
 
 from repro.configs.registry import get_arch
