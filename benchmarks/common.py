@@ -71,14 +71,19 @@ def true_cost(space: GemmConfigSpace, state) -> float:
 
 def run_tuner(space, tuner_name: str, budget: Budget, seed: int = 0,
               noise: float = 0.1, n_workers: int = 1, journal=None,
-              executor=None):
+              executor=None, analyze: str = "off", stats=None):
     """One tuning run under the paper protocol.  ``n_workers`` spreads
     each proposed candidate batch over parallel engine lanes (the trial
     sequence is unchanged; only the clock compresses); ``journal`` plugs
     in a persistent trial cache.  ``executor`` (a LaneExecutor or a
     ``sim``/``thread``/``process`` name) picks how lanes run — with a
     real executor the clock is *measured* lane wall time, so reported
-    speedups are wall-clock parallelism, not simulated compression."""
+    speedups are wall-clock parallelism, not simulated compression.
+    ``analyze`` turns on the engine's static pre-filter (``warn`` or
+    ``prune``, see ``repro.core.analysis``); ``stats`` plugs in a shared
+    :class:`MeasureStats` so callers can read ``trials_avoided``.  With
+    everything at defaults the engine-free path is bit-identical to the
+    historical protocol."""
     from repro.core.executor import make_executor
 
     cost = make_cost(space, seed=seed, noise=noise)
@@ -86,13 +91,16 @@ def run_tuner(space, tuner_name: str, budget: Budget, seed: int = 0,
     if owns_executor:
         executor = make_executor(executor)
     engine = None
-    if journal is not None or n_workers > 1 or executor is not None:
+    if (journal is not None or n_workers > 1 or executor is not None
+            or analyze != "off" or stats is not None):
         engine = MeasureEngine(
             cost,
             n_workers=n_workers,
             journal=journal,
             workload_key=workload_key(space.m, space.k, space.n, "bfloat16", cost.name),
             executor=executor,
+            analyze=analyze,
+            stats=stats,
         )
     tuner = TUNERS[tuner_name](space, cost, seed=seed, **TUNER_KW.get(tuner_name, {}))
     try:

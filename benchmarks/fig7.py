@@ -25,15 +25,16 @@ simulated-clock compression from real wall-clock parallelism.
 
 from __future__ import annotations
 
-import math
 
 from repro.core import Budget, GemmConfigSpace
+from repro.core.measure import MeasureStats
 
 from .common import PAPER_TUNERS, EXTRA_TUNERS, run_tuner, true_cost
 
 
 def main(seeds: int = 3, fractions=(0.0002, 0.0005, 0.001), quick: bool = False,
-         n_workers: int = 1, executor: str | None = None) -> dict:
+         n_workers: int = 1, executor: str | None = None,
+         analyze: str = "off") -> dict:
     space = GemmConfigSpace(1024, 1024, 1024)
     tuners = PAPER_TUNERS + EXTRA_TUNERS
     if quick:
@@ -45,7 +46,7 @@ def main(seeds: int = 3, fractions=(0.0002, 0.0005, 0.001), quick: bool = False,
             for seed in range(seeds):
                 res, final = run_tuner(
                     space, tuner, Budget(max_fraction=frac), seed=seed,
-                    n_workers=n_workers, executor=executor,
+                    n_workers=n_workers, executor=executor, analyze=analyze,
                 )
                 finals.append(final)
             best = min(finals)
@@ -53,16 +54,20 @@ def main(seeds: int = 3, fractions=(0.0002, 0.0005, 0.001), quick: bool = False,
             results[tuner][frac] = (best, mean)
             print(f"fig7a,{tuner},{frac},{best*1e6:.3f},{mean*1e6:.3f}", flush=True)
         # time curve at the largest budget (one seed, the paper's style)
+        stats = MeasureStats() if analyze != "off" else None
         res, _ = run_tuner(
             space, tuner, Budget(max_fraction=fractions[-1]), seed=0,
-            n_workers=n_workers, executor=executor,
+            n_workers=n_workers, executor=executor, analyze=analyze,
+            stats=stats,
         )
         for t_s, c in res.best_time_curve()[:: max(1, res.n_trials // 20)]:
             print(f"fig7b,{tuner},{t_s:.1f},{true_cost(space, res.best_state)*1e6:.3f},{c*1e6:.3f}")
+        avoided = f",trials_avoided={stats.trials_avoided}" if stats else ""
         print(
             f"fig7engine,{tuner},workers={res.n_workers},"
             f"executor={res.executor},"
-            f"cache_hit={res.cache_hit_rate:.3f},clock_s={res.clock_s:.1f}",
+            f"cache_hit={res.cache_hit_rate:.3f},clock_s={res.clock_s:.1f}"
+            f"{avoided}",
             flush=True,
         )
     # headline: savings vs xgboost/rnn at 0.1% (paper: 24% / 40%)
@@ -89,6 +94,11 @@ if __name__ == "__main__":
                     choices=["sim", "thread", "process"],
                     help="lane executor; sim = simulated clock (default), "
                          "thread/process = measured wall-clock lanes")
+    ap.add_argument("--analyze", default="off", choices=["off", "warn", "prune"],
+                    help="static schedule pre-filter; prune rejects "
+                         "provably-bad candidates before they occupy a lane "
+                         "(the final best is unchanged — see "
+                         "repro.core.analysis)")
     args = ap.parse_args()
     main(seeds=args.seeds, quick=args.quick, n_workers=args.workers,
-         executor=args.executor)
+         executor=args.executor, analyze=args.analyze)

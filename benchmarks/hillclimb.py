@@ -15,7 +15,6 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
 import argparse
 import dataclasses
-import json
 import sys
 
 sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src")))
@@ -23,7 +22,6 @@ sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
 
 def variant_space(cfg, rules):
     """Named variants: (cfg_override, rules_override) builders."""
-    import jax
 
     def no_sp(r):
         return dataclasses.replace(r, sp=None)

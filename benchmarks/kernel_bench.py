@@ -4,7 +4,6 @@ small shape (an honest on-this-machine measurement)."""
 
 from __future__ import annotations
 
-import time
 
 from repro.core import AnalyticalTPUCost, Budget, GemmConfigSpace
 from repro.core.config_space import TilingState

@@ -162,6 +162,27 @@ def main(
             sim_block["journal_replay_trials_per_s"] = round(
                 len(states) / t_replay, 1
             )
+
+        # ---- static pre-filter: analyzer verdicts ahead of the lanes --------
+        # prepend the untiled initial state (degenerate, hence prunable)
+        # so trials_avoided is deterministically nonzero; the kept states
+        # are served by the warm compile cache, so the delta measured
+        # here is the filter itself, not compilation
+        flt = mk()
+        eng = MeasureEngine(flt, n_workers=1, analyze="prune")
+        filter_states = [space.initial_state()] + states
+        t_flt = _timed_serial(eng, filter_states)
+        sim_block["static_filter"] = {
+            "mode": "prune",
+            "trials_avoided": eng.stats.trials_avoided,
+            "n_static_flags": eng.stats.n_static_flags,
+            "static_s": round(eng.stats.static_s, 6),
+            "static_s_per_wave": round(
+                eng.stats.static_s / max(1, eng.stats.n_waves), 9
+            ),
+            "elapsed_s": round(t_flt, 3),
+            **_compile_block(eng.stats),
+        }
         result["executors"]["sim"] = sim_block
 
         # ---- thread lanes: shared backend, gated timed regions -------------

@@ -42,7 +42,6 @@ import os
 import shutil
 import sys
 import tempfile
-import time
 
 import numpy as np
 

@@ -22,7 +22,6 @@ from __future__ import annotations
 import json
 import os
 import shutil
-import threading
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Optional

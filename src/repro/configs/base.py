@@ -10,8 +10,6 @@ autotune a whole model.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Optional
 
 __all__ = ["ArchConfig", "ShapeSpec", "SHAPES"]
 
@@ -133,7 +131,6 @@ class ArchConfig:
         total = emb + self.n_layers * per_layer
         if self.family == "encdec":
             # encoder layers + cross attention in decoder
-            enc_layer = d * 4 * d * 0  # computed via same formula below
             qkv = d * (self.n_heads + 2 * self.n_kv_heads) * hd
             o = self.n_heads * hd * d
             mlp = 2 * d * self.d_ff

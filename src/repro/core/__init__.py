@@ -7,11 +7,21 @@ Public surface:
   FlashAttnConfigSpace / FlashScheduleState— the first non-GEMM instance
   ops.*  (OpSpec / get_op / OPS)           — the operator registry
   cost.*                                   — pluggable cost oracles
+  analysis.* (ScheduleAnalyzer)            — compile-free static verdicts
   tuners.*                                 — G-BFS, N-A2C + baselines
   TuningSession / Workload (GemmWorkload)  — orchestration
   TuningRecords                            — persisted best configs
 """
 
+from .analysis import (
+    ILLEGAL,
+    OK,
+    WASTEFUL,
+    AnalysisResult,
+    ScheduleAnalyzer,
+    analyzer_for_backend,
+    should_prune,
+)
 from .config_space import Action, GemmConfigSpace, TilingState
 from .cost import (
     AnalyticalTPUCost,
@@ -57,6 +67,13 @@ from .tuners import (
 )
 
 __all__ = [
+    "ILLEGAL",
+    "OK",
+    "WASTEFUL",
+    "AnalysisResult",
+    "ScheduleAnalyzer",
+    "analyzer_for_backend",
+    "should_prune",
     "Action",
     "GemmConfigSpace",
     "TilingState",

@@ -37,6 +37,7 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from .analysis import gemm_working_set_bytes
 from .space import (
     Action,
     FactoredSearchSpace,
@@ -150,9 +151,10 @@ class GemmConfigSpace(FactoredSearchSpace):
     # -- hardware footprint ---------------------------------------------------
     def working_set_bytes(self, s: TilingState, in_bytes: int = 2) -> int:
         """Double-buffered A/B blocks plus the f32 accumulator — the VMEM
-        working set every cost backend guards with."""
-        bm, bk, bn = s.block_m, s.block_k, s.block_n
-        return 2 * (bm * bk + bk * bn) * in_bytes + bm * bn * 4
+        working set every cost backend guards with.  The arithmetic
+        lives in ``repro.core.analysis`` (the analyzer's single budget
+        function), so filter and oracle can never disagree."""
+        return gemm_working_set_bytes(s.block_m, s.block_k, s.block_n, in_bytes)
 
     # -- featurization (for surrogate / policy models) ------------------------
     def features(self, s: TilingState) -> np.ndarray:

@@ -29,6 +29,7 @@ import math
 
 import numpy as np
 
+from ..analysis import ScheduleAnalyzer, gemm_working_set_bytes
 from ..config_space import GemmConfigSpace, TilingState
 from .base import CostBackend
 
@@ -89,10 +90,15 @@ class AnalyticalTPUCost(CostBackend):
         self.noise_sigma = noise_sigma
         self.seed = seed
         self.spec = spec or TpuSpec()
+        # the shared static analyzer owns the feasibility cliff, so this
+        # oracle and the engine's pre-filter can never disagree
+        self.analyzer = ScheduleAnalyzer(
+            self.space, spec=self.spec, in_bytes=self.in_bytes
+        )
 
     # -- components -----------------------------------------------------------
     def vmem_bytes(self, s: TilingState) -> int:
-        return self.space.working_set_bytes(s, self.in_bytes)
+        return self.analyzer.vmem_bytes(s)
 
     def compute_time(self, s: TilingState) -> float:
         sp = self.spec
@@ -166,7 +172,7 @@ class AnalyticalTPUCost(CostBackend):
         return rng.lognormal(0.0, self.noise_sigma)
 
     def cost_once(self, s: TilingState, repeat_idx: int) -> float:
-        if self.vmem_bytes(s) > self.spec.vmem_bytes:
+        if self.analyzer.exceeds_vmem(s):
             return math.inf  # kernel does not fit VMEM: measurement failure
         base = max(self.compute_time(s), self.memory_time(s)) + self.overhead_time(s)
         if self.noise_sigma <= 0.0:
@@ -188,7 +194,7 @@ class AnalyticalTPUCost(CostBackend):
         for s in states:
             gm, gk, gn = s.grid
             bm, bk, bn = s.block_m, s.block_k, s.block_n
-            vmem.append(2 * (bm * bk + bk * bn) * self.in_bytes + bm * bn * 4)
+            vmem.append(gemm_working_set_bytes(bm, bk, bn, self.in_bytes))
             nc = gm * gk * gn * (bm // s.sub_m) * (bn // s.sub_n)
             cf = (
                 2

@@ -33,6 +33,7 @@ import zlib
 
 import numpy as np
 
+from ..analysis import ScheduleAnalyzer
 from ..flash_space import FlashAttnConfigSpace, FlashScheduleState
 from .analytical import TpuSpec, _pad
 from .base import CostBackend
@@ -75,13 +76,18 @@ class FlashAnalyticalCost(CostBackend):
         self.noise_sigma = noise_sigma
         self.seed = seed
         self.spec = spec or TpuSpec()
+        # the shared static analyzer owns the feasibility cliff, so this
+        # oracle and the engine's pre-filter can never disagree
+        self.analyzer = ScheduleAnalyzer(
+            self.space, spec=self.spec, in_bytes=self.in_bytes
+        )
         # visits depend only on the block schedule; compute_time and
         # overhead_time both ask per repeat, so memoize per (bq, bkv)
         self._visits_cache: dict[tuple[int, int], int] = {}
 
     # -- components -----------------------------------------------------------
     def vmem_bytes(self, s: FlashScheduleState) -> int:
-        return self.space.working_set_bytes(s, self.in_bytes)
+        return self.analyzer.vmem_bytes(s)
 
     def kv_visits(self, s: FlashScheduleState) -> int:
         """Total kv-block visits across the q grid — exact, matching the
@@ -173,7 +179,7 @@ class FlashAnalyticalCost(CostBackend):
         return rng.lognormal(0.0, self.noise_sigma)
 
     def cost_once(self, s: FlashScheduleState, repeat_idx: int) -> float:
-        if self.vmem_bytes(s) > self.spec.vmem_bytes:
+        if self.analyzer.exceeds_vmem(s):
             return math.inf  # does not fit VMEM: measurement failure
         base = max(self.compute_time(s), self.memory_time(s)) + self.overhead_time(s)
         if self.noise_sigma <= 0.0:

@@ -58,7 +58,6 @@ import time
 from collections import OrderedDict
 from typing import Optional
 
-import numpy as np
 
 from ..space import SearchSpace, State
 from .base import CostBackend

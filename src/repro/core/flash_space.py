@@ -33,6 +33,7 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from .analysis import flash_working_set_bytes
 from .space import FactoredSearchSpace, register_state_type
 
 __all__ = ["FlashScheduleState", "FlashAttnConfigSpace"]
@@ -130,14 +131,12 @@ class FlashAttnConfigSpace(FactoredSearchSpace):
     def working_set_bytes(self, s: FlashScheduleState, in_bytes: int = 2) -> int:
         """Mirror of the kernel's VMEM layout: the q block and the fully
         resident K/V (its BlockSpec streams whole sequences per grid
-        cell), the f32 accumulator + logits tile, and running max/sum."""
-        bq, bkv = s.block_q, s.block_kv
-        hd = self.head_dim
-        return (
-            (bq * hd + 2 * self.seq_kv * hd) * in_bytes
-            + bq * hd * 4  # f32 accumulator
-            + bq * bkv * 4  # logits/probability tile
-            + 2 * bq * 4  # running max + sum
+        cell), the f32 accumulator + logits tile, and running max/sum.
+        The arithmetic lives in ``repro.core.analysis`` (the analyzer's
+        single budget function) so filter and oracle can never
+        disagree."""
+        return flash_working_set_bytes(
+            s.block_q, s.block_kv, self.seq_kv, self.head_dim, in_bytes
         )
 
     # -- featurization --------------------------------------------------------

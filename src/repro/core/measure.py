@@ -41,8 +41,10 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from typing import Optional, Sequence
 
+from .analysis import ScheduleAnalyzer, analyzer_for_backend, should_prune
 from .space import State
 from .cost.base import CostBackend
 from .executor import LaneExecutor, SimulatedExecutor
@@ -60,6 +62,7 @@ class MeasureOutcome:
     cache_hit: bool
     lane_s: float  # lane occupancy: simulated model or measured wall
     error: Optional[str] = None  # lane failure note (crash/timeout)
+    static: Optional[str] = None  # analyzer verdict reason if pruned pre-dispatch
 
 
 @dataclasses.dataclass
@@ -83,6 +86,10 @@ class MeasureStats:
     # -- journal auto-reload (mid-search sibling merging) --------------------
     n_journal_reloads: int = 0
     n_journal_rows_merged: int = 0  # sibling rows ingested mid-search
+    # -- static pre-filter (see repro.core.analysis; zero with analyze=off) --
+    trials_avoided: int = 0  # candidates rejected without occupying a lane
+    n_static_flags: int = 0  # advisory verdicts (warn mode, or non-pruned WASTEFUL)
+    static_s: float = 0.0  # wall seconds spent in the analyzer
 
     @property
     def n_measured(self) -> int:
@@ -124,7 +131,13 @@ class MeasureEngine:
         stats: Optional[MeasureStats] = None,
         executor: Optional[LaneExecutor] = None,
         reload_every: int = 0,
+        analyze: str = "off",
+        analyzer: Optional[ScheduleAnalyzer] = None,
     ):
+        if analyze not in ("off", "warn", "prune"):
+            raise ValueError(
+                f"analyze must be 'off', 'warn' or 'prune', got {analyze!r}"
+            )
         self.backend = backend
         self.n_workers = max(1, int(n_workers))
         # how a lane runs: simulated (default, bit-identical to the
@@ -153,6 +166,21 @@ class MeasureEngine:
         # mid-search instead of re-measuring (0 disables)
         self.reload_every = max(0, int(reload_every))
         self._waves_since_reload = 0
+        # static pre-filter mode: "off" never consults the analyzer (the
+        # historical bit-identical path), "warn" classifies misses and
+        # counts advisory flags, "prune" rejects provably-bad candidates
+        # before they occupy a lane (journaled as audit rows, counted in
+        # trials_avoided; the trial is still charged by TuningContext)
+        self.analyze = analyze
+        self._analyzer = analyzer
+
+    @property
+    def analyzer(self) -> ScheduleAnalyzer:
+        """The static analyzer for this backend's space/spec (built lazily
+        so ``analyze='off'`` engines never pay for one)."""
+        if self._analyzer is None:
+            self._analyzer = analyzer_for_backend(self.backend)
+        return self._analyzer
 
     # -- clock model ---------------------------------------------------------
     def lane_time(self, cost: float) -> float:
@@ -183,6 +211,7 @@ class MeasureEngine:
                 self.stats.n_journal_rows_merged += self.journal.reload()
         outcomes: list[Optional[MeasureOutcome]] = [None] * len(states)
         miss_idx: list[int] = []
+        n_hits = 0
         for i, s in enumerate(states):
             cached = None
             if self.journal is not None and self.journal_key is not None:
@@ -191,8 +220,34 @@ class MeasureEngine:
                 )
             if cached is not None:
                 outcomes[i] = MeasureOutcome(s, cached, True, 0.0)
+                n_hits += 1
             else:
                 miss_idx.append(i)
+        if miss_idx and self.analyze != "off":
+            # static pre-filter: classify every miss before it occupies a
+            # lane; provably-bad candidates (ILLEGAL, or degenerate
+            # WASTEFUL) are rejected compile-free in prune mode and
+            # journaled as audit rows, anything else merely flagged
+            t0 = time.perf_counter()
+            kept: list[int] = []
+            for i in miss_idx:
+                s = states[i]
+                res = self.analyzer.analyze(s)
+                if self.analyze == "prune" and should_prune(res):
+                    outcomes[i] = MeasureOutcome(
+                        s, math.inf, False, 0.0, static=res.reason
+                    )
+                    self.stats.trials_avoided += 1
+                    if self.journal is not None and self.journal_key is not None:
+                        self.journal.record_static(
+                            self.journal_key, s, res.reason, op=self.backend.op
+                        )
+                else:
+                    if not res.ok:
+                        self.stats.n_static_flags += 1
+                    kept.append(i)
+            miss_idx = kept
+            self.stats.static_s += time.perf_counter() - t0
         if miss_idx:
             misses = [states[i] for i in miss_idx]
             # NOTE: self.timeout_s is the *simulated charging cap* (a slow
@@ -229,7 +284,7 @@ class MeasureEngine:
                     )
         done = [o for o in outcomes if o is not None]
         self.stats.n_dispatched += len(miss_idx)
-        self.stats.n_cache_hits += len(states) - len(miss_idx)
+        self.stats.n_cache_hits += n_hits
         self.stats.n_waves += 1
         span = max((o.lane_s for o in done), default=0.0)
         self.stats.lane_busy_s += sum(o.lane_s for o in done)

@@ -39,6 +39,7 @@ __all__ = [
     "parse_workload_key_generic",
     "op_of_workload_key",
     "donor_distance",
+    "iter_journal_rows",
     "compile_cache_dir_for",
     "global_records",
     "set_global_records",
@@ -273,6 +274,7 @@ class TrialJournal:
         self._costs: dict[str, dict[str, float]] = {}
         self._best: dict[str, tuple[float, list]] = {}
         self._ops: dict[str, str] = {}  # workload -> op (schema guard)
+        self._static_seen: dict[str, set] = {}  # audit rows already journaled
         self._fd: Optional[int] = None
         self._read_pos = 0  # how far reload() has consumed the file
         if path:
@@ -314,6 +316,15 @@ class TrialJournal:
                     continue
                 try:
                     row = json.loads(line)
+                    if isinstance(row, dict) and "static" in row:
+                        # analyzer audit row (a pruned candidate, not a
+                        # measurement): remember it for dedup but keep it
+                        # out of the cost table — a later analyze=off run
+                        # must re-measure the state, not cache-hit inf
+                        self._static_seen.setdefault(
+                            row["w"], set()
+                        ).add(row["k"])
+                        continue
                     ingested = self._ingest(
                         row["w"], row["k"], row["s"], self._row_cost(row),
                         # schema field added with the op registry; every
@@ -450,6 +461,38 @@ class TrialJournal:
                 while view:
                     view = view[os.write(self._fd, view):]
 
+    def record_static(self, workload: str, state: State, reason: str,
+                      op: Optional[str] = None) -> None:
+        """Journal an analyzer rejection as an **audit row**:
+        ``{"c": null, "static": "<reason>"}``.  Unlike :meth:`record`
+        this never enters the cost table — the row documents *why* the
+        candidate was pruned without ever being measured, and a later
+        ``analyze=off`` run must re-measure it rather than cache-hit an
+        inferred failure.  Legacy readers that ignore the ``static``
+        field see ``c=None`` (a failure row), which is safe."""
+        if op is None:
+            op = op_of_workload_key(workload)
+        with self._lock:
+            seen = self._static_seen.setdefault(workload, set())
+            key = state.key()
+            if key in seen:
+                return
+            seen.add(key)
+            if not self.path:
+                return
+            if self._fd is None:
+                d = os.path.dirname(os.path.abspath(self.path))
+                os.makedirs(d, exist_ok=True)
+                self._fd = os.open(
+                    self.path, os.O_WRONLY | os.O_APPEND | os.O_CREAT, 0o644
+                )
+            row = {"w": workload, "k": key, "s": state.as_lists(),
+                   "op": op, "c": None, "static": str(reason)}
+            line = json.dumps(row, allow_nan=False, separators=(",", ":"))
+            view = memoryview((line + "\n").encode("utf-8"))
+            while view:
+                view = view[os.write(self._fd, view):]
+
     def close(self) -> None:
         """Release the append descriptor; the in-memory view (and
         ``_read_pos``) survive, so the journal stays usable — the next
@@ -458,6 +501,24 @@ class TrialJournal:
             if self._fd is not None:
                 os.close(self._fd)
                 self._fd = None
+
+
+def iter_journal_rows(path: str) -> Iterable[dict]:
+    """Yield every parseable row dict of a journal file, skipping blank
+    and torn lines — the audit CLI's raw view (it needs the rows, not
+    the deduped cost table :class:`TrialJournal` builds)."""
+    if not os.path.exists(path):
+        return
+    with open(path, "rb") as f:
+        for line in f:
+            if not line.strip():
+                continue
+            try:
+                row = json.loads(line)
+            except ValueError:
+                continue  # torn tail from a crashed writer
+            if isinstance(row, dict):
+                yield row
 
 
 _GLOBAL = TuningRecords()

@@ -253,6 +253,7 @@ class TuningSession:
         stats: Optional[MeasureStats] = None,
         executor: Optional[LaneExecutor] = None,
         reload_every: int = 0,
+        analyze: str = "off",
     ) -> TuneResult:
         space = wl.space()
         cost = self.cost_factory(space)
@@ -263,6 +264,10 @@ class TuningSession:
             raise ValueError(
                 "executor=... conflicts with the provided engine's executor"
             )
+        if engine is not None and analyze != "off" and engine.analyze != analyze:
+            raise ValueError(
+                "analyze=... conflicts with the provided engine's analyze mode"
+            )
         if engine is None:
             engine = MeasureEngine(
                 cost,
@@ -272,6 +277,7 @@ class TuningSession:
                 stats=stats,
                 executor=executor,
                 reload_every=reload_every,
+                analyze=analyze,
             )
         budget = budget or Budget(max_fraction=0.001)
         tuner_cls = TUNERS[tuner_name]
@@ -319,6 +325,7 @@ class TuningSession:
         tuner_kwargs: Optional[dict] = None,
         executor: Optional[LaneExecutor | str] = None,
         reload_every: int = 0,
+        analyze: str = "off",
     ) -> ArchTuneReport:
         """Tune every distinct workload an architecture executes through
         one shared engine configuration and one shared budget pool.
@@ -388,6 +395,7 @@ class TuningSession:
                     stats=stats,
                     executor=exec_obj,
                     reload_every=reload_every,
+                    analyze=analyze,
                 )
                 if left_trials is not None:
                     left_trials -= res.n_trials

@@ -189,6 +189,20 @@ class SearchSpace(abc.ABC):
     @abc.abstractmethod
     def is_legitimate(self, s: State) -> bool: ...
 
+    def structural_error(self, s: State) -> Optional[tuple[str, str]]:
+        """``(reason, detail)`` when the state is structurally invalid
+        for this space — the machine-readable form of
+        ``is_legitimate`` consumed by the static analyzer
+        (``repro.core.analysis``).  ``None`` means structurally sound.
+        Subclasses with richer structure override this with specific
+        reasons; the default wraps ``is_legitimate``."""
+        try:
+            if self.is_legitimate(s):
+                return None
+        except Exception as e:
+            return ("malformed", f"{type(e).__name__}: {e}")
+        return ("illegitimate", "state fails the space's legitimacy check")
+
     # -- enumeration / sampling ----------------------------------------------
     @abc.abstractmethod
     def size(self) -> int: ...
@@ -348,20 +362,54 @@ class FactoredSearchSpace(SearchSpace):
     def is_legitimate(self, s: State) -> bool:
         """J of Eqn. 5: exact products, positive integers, row depths,
         plus the optional hardware-constraint closure and the
-        subclass's :meth:`extra_legitimate` hook."""
-        rows = s.as_lists()
+        subclass's :meth:`extra_legitimate` hook.  Defined as "no
+        structural error", so the boolean check and the analyzer's
+        reasons can never drift apart."""
+        return self.structural_error(s) is None
+
+    def structural_error(self, s: State) -> Optional[tuple[str, str]]:
+        """Fine-grained structural verdict for factored-row states (see
+        ``SearchSpace.structural_error``).  Detail strings are only
+        built on the failure path — the passing path stays as cheap as
+        the historical boolean check (this runs per neighbor step)."""
+        try:
+            rows = s.as_lists()
+        except Exception as e:
+            return ("malformed", f"{type(e).__name__}: {e}")
         if len(rows) != len(self._values):
-            return False
-        for row, v, d in zip(rows, self._values, self._depths):
+            return (
+                "row_count",
+                f"{len(rows)} factor rows, space has {len(self._values)} dims",
+            )
+        for i, (row, v, d) in enumerate(zip(rows, self._values, self._depths)):
             if len(row) != d:
-                return False
+                return (
+                    "row_depth",
+                    f"dim {i}: {len(row)} factors, nesting depth is {d}",
+                )
             if any(f < 1 for f in row):
-                return False
+                return (
+                    "factor_nonpositive",
+                    f"dim {i}: factors {list(row)} include a zero/negative "
+                    f"grid or block extent",
+                )
             if math.prod(row) != v:
-                return False
+                return (
+                    "product_mismatch",
+                    f"dim {i}: prod({list(row)}) != {v} (block larger than "
+                    f"the dim, or a stale record for another shape)",
+                )
         if self.extra_constraint is not None and not self.extra_constraint(s):
-            return False
-        return self.extra_legitimate(s)
+            return (
+                "extra_constraint",
+                "the space's hardware-constraint closure rejected the state",
+            )
+        if not self.extra_legitimate(s):
+            return (
+                "op_constraint",
+                f"{self.op} op-specific legitimacy rejected the state",
+            )
+        return None
 
     def extra_legitimate(self, s: State) -> bool:
         """Op-specific legitimacy beyond exact products (default: none)."""

@@ -25,7 +25,7 @@ import math
 import numpy as np
 
 from ..space import State
-from .base import BudgetExhausted, Tuner, TuningContext
+from .base import Tuner, TuningContext
 
 __all__ = ["GBTTuner", "GradientBoostedTrees"]
 

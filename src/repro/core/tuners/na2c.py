@@ -35,7 +35,7 @@ from typing import Optional
 import numpy as np
 
 from ..space import State
-from .base import BudgetExhausted, Tuner, TuningContext
+from .base import Tuner, TuningContext
 
 __all__ = ["NA2CTuner"]
 

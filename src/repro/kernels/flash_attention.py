@@ -37,7 +37,6 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
     """One (batch, kv_head, q_block) cell: stream kv blocks, online
     softmax into the VMEM accumulator."""
     iq = pl.program_id(2)
-    g = q_ref.shape[3]
 
     acc_ref[...] = jnp.zeros_like(acc_ref)
     m_ref[...] = jnp.full_like(m_ref, -1e30)

@@ -93,7 +93,10 @@ _MISS = object()
 _CACHE_LOCK = threading.Lock()
 _DISPATCH_CACHE: dict[tuple, object] = {}
 _DISPATCH_STATS: dict[str, dict[str, int]] = {}
-_STAT_FIELDS = ("records", "heuristic", "xla", "memo_hits", "store_lookups")
+_STAT_FIELDS = (
+    "records", "heuristic", "xla", "memo_hits", "store_lookups",
+    "static_reject",
+)
 
 
 def invalidate_dispatch_cache() -> None:
@@ -127,12 +130,35 @@ def reset_dispatch_stats() -> None:
         _DISPATCH_STATS.clear()
 
 
+def _static_reject_record(op: str, dims: tuple, dtype: str, st) -> bool:
+    """True when a tuned record is provably unusable on the current
+    hardware spec: the static analyzer (see ``repro.core.analysis``)
+    classifies it ILLEGAL for this op workload — a stale record for
+    another shape, a corrupted state, or a schedule whose working set
+    no longer fits VMEM.  Any failure to even build the space/analyzer
+    also rejects: falling back to the heuristic is always safe, serving
+    a broken record never is."""
+    try:
+        from repro.core.analysis import ScheduleAnalyzer, dtype_in_bytes
+        from repro.core.ops import get_op
+
+        depths = tuple(len(r) for r in st.as_lists())
+        space = get_op(op).make_space(tuple(dims), depths)
+        analyzer = ScheduleAnalyzer(space, in_bytes=dtype_in_bytes(str(dtype)))
+        return analyzer.analyze(st).illegal
+    except Exception:
+        return True
+
+
 def lookup_tuned_state(op: str, dims: tuple, dtype: str):
     """Tuned schedule :class:`~repro.core.space.State` for one op
     workload, or None.  Consults the process-global
     :class:`TuningRecords` under the policy's cost-backend namespace;
-    memoized per ``(op, dims, dtype, backend)`` until records change.
-    Ops opt in via ``KernelPolicy.record_ops``."""
+    records the static analyzer rejects as ILLEGAL on the current spec
+    are refused (counted as ``static_reject`` in ``dispatch_stats``, the
+    caller falls back to its heuristic).  Memoized per
+    ``(op, dims, dtype, backend)`` until records change.  Ops opt in
+    via ``KernelPolicy.record_ops``."""
     if op not in _POLICY.record_ops:
         return None
     key = (op, tuple(dims), str(dtype), _POLICY.cost_backend)
@@ -145,6 +171,9 @@ def lookup_tuned_state(op: str, dims: tuple, dtype: str):
     st = global_records().lookup_state(
         workload_key_for(op, tuple(dims), str(dtype), _POLICY.cost_backend)
     )
+    if st is not None and _static_reject_record(op, dims, dtype, st):
+        note_dispatch(op, "static_reject")
+        st = None  # memoized as a miss: refuse once per (shape, records)
     with _CACHE_LOCK:
         _DISPATCH_CACHE[key] = st
     return st

@@ -1,0 +1,237 @@
+"""Audit persistent tuning stores with the static schedule analyzer.
+
+``python -m repro.launch.analyze`` re-derives a verdict (see
+``repro.core.analysis``) for every record in a :class:`TuningRecords`
+JSON and every row of a :class:`TrialJournal`, and exits nonzero when
+anything is provably broken — the CI tripwire against shipping stale or
+corrupted schedule stores:
+
+* a record whose state is ILLEGAL for its own workload key — a factor
+  product that no longer matches the dims (a stale record for another
+  shape), a corrupted state list, or a working set over the VMEM budget;
+* a record filed under an unparseable key, or whose ``op`` field
+  disagrees with its key's op (cross-op contamination);
+* a journal row carrying a *finite* measured cost for a schedule the
+  analyzer proves ILLEGAL — every backend scores those ``inf`` (the
+  oracles delegate the cliff to the same analyzer; ``XLATimedCost``
+  guards VMEM with the same budget), so a finite cost means the store
+  and the models disagree about reality.
+
+WASTEFUL verdicts and unparseable *journal* keys are warnings: dominated
+schedules are legal to serve, and a journal is an append-only log that
+may carry foreign experiments.  ``--strict`` promotes warnings to the
+exit code.  Journal ``static`` rows (the engine's pruned-candidate audit
+trail) are counted and reported, never flagged.
+
+Usage::
+
+  python -m repro.launch.analyze                       # records/*.json + journals
+  python -m repro.launch.analyze --records r.json      # one store
+  python -m repro.launch.analyze --journal j.jsonl     # one journal
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import math
+import os
+import sys
+from typing import Optional
+
+from repro.core.analysis import ScheduleAnalyzer, dtype_in_bytes
+from repro.core.ops import get_op
+from repro.core.records import (
+    TrialJournal,
+    iter_journal_rows,
+    parse_workload_key_generic,
+)
+from repro.core.space import state_from_lists
+
+
+class _Auditor:
+    """Shared error/warning sink + per-workload analyzer cache."""
+
+    def __init__(self) -> None:
+        self.errors: list[str] = []
+        self.warnings: list[str] = []
+        self._analyzers: dict[tuple, Optional[ScheduleAnalyzer]] = {}
+
+    def error(self, where: str, msg: str) -> None:
+        self.errors.append(f"{where}: {msg}")
+        print(f"[analyze] ERROR {where}: {msg}")
+
+    def warn(self, where: str, msg: str) -> None:
+        self.warnings.append(f"{where}: {msg}")
+        print(f"[analyze] warning {where}: {msg}")
+
+    def analyzer(self, op: str, dims: tuple, dtype: str,
+                 depths: tuple) -> Optional[ScheduleAnalyzer]:
+        """Analyzer for one workload identity, or None when the op's
+        space cannot even be built (reported by the caller)."""
+        key = (op, dims, dtype, depths)
+        if key not in self._analyzers:
+            try:
+                space = get_op(op).make_space(dims, depths)
+                self._analyzers[key] = ScheduleAnalyzer(
+                    space, in_bytes=dtype_in_bytes(dtype)
+                )
+            except Exception:
+                self._analyzers[key] = None
+        return self._analyzers[key]
+
+
+def _depths_of(lists) -> tuple:
+    return tuple(len(r) for r in lists)
+
+
+def audit_records(path: str, auditor: _Auditor) -> int:
+    """Audit one TuningRecords JSON; returns the number of records seen."""
+    try:
+        with open(path) as f:
+            data = json.load(f)
+        assert isinstance(data, dict)
+    except Exception as e:
+        auditor.error(path, f"unreadable records file ({type(e).__name__}: {e})")
+        return 0
+    n = 0
+    for key, rec in sorted(data.items()):
+        n += 1
+        where = f"{path} :: {key}"
+        parsed = parse_workload_key_generic(key)
+        if parsed is None:
+            auditor.error(where, "unparseable workload key")
+            continue
+        op, dims, dtype, _backend = parsed
+        rec_op = rec.get("op") if isinstance(rec, dict) else None
+        if rec_op is not None and rec_op != op:
+            auditor.error(
+                where, f"cross-op record: op field {rec_op!r} under a {op!r} key"
+            )
+            continue
+        try:
+            lists = rec["state"]
+            st = state_from_lists(op, lists)
+        except Exception as e:
+            auditor.error(
+                where, f"undeserializable state ({type(e).__name__}: {e})"
+            )
+            continue
+        an = auditor.analyzer(op, dims, dtype, _depths_of(lists))
+        if an is None:
+            auditor.error(where, f"cannot build the {op!r} search space")
+            continue
+        res = an.analyze(st)
+        if res.illegal:
+            auditor.error(where, f"ILLEGAL record ({res.reason}): {res.detail}")
+        elif res.wasteful:
+            auditor.warn(where, f"WASTEFUL record ({res.reason}): {res.detail}")
+    return n
+
+
+def audit_journal(path: str, auditor: _Auditor) -> tuple[int, int]:
+    """Audit one trial journal; returns (rows seen, static audit rows)."""
+    n = n_static = 0
+    for row in iter_journal_rows(path):
+        n += 1
+        try:
+            base_key = row["w"].split("?", 1)[0]
+            state_key = row["k"]
+        except (KeyError, AttributeError, TypeError):
+            auditor.warn(path, f"malformed row (no w/k): {str(row)[:80]}")
+            continue
+        where = f"{path} :: {base_key} :: {state_key}"
+        parsed = parse_workload_key_generic(base_key)
+        if parsed is None:
+            # journals are append-only logs that may carry foreign
+            # experiments; an alien key is suspicious, not fatal
+            auditor.warn(where, "unparseable journal workload key")
+            continue
+        op, dims, dtype, _backend = parsed
+        row_op = row.get("op", "gemm")
+        if row_op != op:
+            auditor.error(
+                where, f"cross-op row: op field {row_op!r} under a {op!r} key"
+            )
+            continue
+        if "static" in row:
+            n_static += 1  # the engine's pruned-candidate audit trail
+            continue
+        try:
+            lists = row["s"]
+            st = state_from_lists(op, lists)
+        except Exception as e:
+            auditor.warn(
+                where, f"undeserializable state ({type(e).__name__}: {e})"
+            )
+            continue
+        an = auditor.analyzer(op, dims, dtype, _depths_of(lists))
+        if an is None:
+            auditor.warn(where, f"cannot build the {op!r} search space")
+            continue
+        res = an.analyze(st)
+        if res.illegal and math.isfinite(TrialJournal._row_cost(row)):
+            auditor.error(
+                where,
+                f"finite measured cost for an ILLEGAL schedule "
+                f"({res.reason}): {res.detail}",
+            )
+    return n, n_static
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.analyze",
+        description="Audit tuning records and trial journals with the "
+                    "static schedule analyzer; exits nonzero on provably "
+                    "broken entries (CI tripwire).",
+    )
+    ap.add_argument("--records", action="append", default=None,
+                    help="TuningRecords JSON to audit (repeatable; default: "
+                         "records/*.json)")
+    ap.add_argument("--journal", action="append", default=None,
+                    help="trial-journal JSONL to audit (repeatable; default: "
+                         "the <records>.journal.jsonl next to each records "
+                         "file, when present)")
+    ap.add_argument("--strict", action="store_true",
+                    help="warnings (WASTEFUL records, alien journal rows) "
+                         "also fail the exit code")
+    args = ap.parse_args(argv)
+
+    records = args.records
+    journals = args.journal
+    if records is None and journals is None:
+        records = sorted(glob.glob("records/*.json"))
+        journals = [
+            p + ".journal.jsonl"
+            for p in records
+            if os.path.exists(p + ".journal.jsonl")
+        ]
+    records = records or []
+    journals = journals or []
+    if not records and not journals:
+        print("[analyze] nothing to audit (no records/*.json here; "
+              "pass --records/--journal)")
+        return 0
+
+    auditor = _Auditor()
+    n_rec = sum(audit_records(p, auditor) for p in records)
+    n_rows = n_static = 0
+    for p in journals:
+        rows, static = audit_journal(p, auditor)
+        n_rows += rows
+        n_static += static
+    print(
+        f"[analyze] audited {n_rec} records in {len(records)} file(s), "
+        f"{n_rows} journal rows ({n_static} static audit rows) in "
+        f"{len(journals)} file(s): {len(auditor.errors)} error(s), "
+        f"{len(auditor.warnings)} warning(s)"
+    )
+    if auditor.errors or (args.strict and auditor.warnings):
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -120,8 +120,10 @@ def flash_workloads_for_arch(
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--op", default="gemm", choices=op_names(),
-                    help="which registered operator to tune")
+    ap.add_argument("--op", default="gemm",
+                    help="which registered operator to tune (validated "
+                         "against the op registry after parsing, so "
+                         "late-registered ops work too)")
     ap.add_argument("--arch", default=None,
                     help="architecture whose workloads to tune "
                          "(required for --op gemm)")
@@ -159,7 +161,19 @@ def main() -> None:
                     help="merge sibling engines' journal rows every N "
                          "measurement waves (mid-search cache sharing "
                          "between concurrent runs; 0 disables)")
+    ap.add_argument("--analyze", default="off", choices=["off", "warn", "prune"],
+                    help="static schedule pre-filter (repro.core.analysis): "
+                         "'warn' classifies candidates and counts advisory "
+                         "flags, 'prune' rejects provably-bad ones before "
+                         "they occupy a measurement lane")
     args = ap.parse_args()
+
+    if args.op not in op_names():
+        # a clear CLI error instead of a deep registry KeyError later
+        ap.error(
+            f"unknown op {args.op!r}: not in the operator registry "
+            f"(registered ops: {', '.join(sorted(op_names()))})"
+        )
 
     if args.op == "gemm":
         if args.arch is None:
@@ -220,6 +234,7 @@ def main() -> None:
             warm_start=args.warm_start,
             executor=args.executor,
             reload_every=args.reload_every,
+            analyze=args.analyze,
         )
     print(
         f"[tune] wrote {len(records)} records to {args.records} "
@@ -227,6 +242,7 @@ def main() -> None:
         f"cache_hit={report.stats.cache_hit_rate():.2f} "
         f"compile_cache_hit={report.stats.compile_cache_hit_rate():.2f} "
         f"compiles={report.stats.n_compiles} "
+        f"trials_avoided={report.stats.trials_avoided} "
         f"lane_failures={report.stats.n_failures})"
     )
 

@@ -9,7 +9,6 @@ the configured compute dtype.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Optional
 
 import jax

@@ -11,14 +11,12 @@ archs skip it (DESIGN.md §4).
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.dist.api import constrain, logical
-from repro.kernels.ops import gemm
 from repro.models import common as cm
 
 __all__ = [

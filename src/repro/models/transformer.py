@@ -13,7 +13,6 @@ depth, which is what makes 80–95-layer dry-runs compile fast);
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Optional
 
 import jax
@@ -369,12 +368,10 @@ def moe_apply(cfg: ArchConfig, p: dict, x: jax.Array):
     # -- sorted capacity dispatch --------------------------------------------
     cap = max(1, int(k * t * cfg.moe_capacity_factor / e))
     flat_e = top_e.reshape(-1)  # (t*k,)
-    flat_w = top_w.reshape(-1)
     flat_tok = jnp.repeat(jnp.arange(t), k)
     order = jnp.argsort(flat_e, stable=True)
     sorted_e = flat_e[order]
     sorted_tok = flat_tok[order]
-    sorted_w = flat_w[order]
     # position of each entry within its expert group
     counts = jnp.bincount(flat_e, length=e)
     starts = jnp.cumsum(counts) - counts

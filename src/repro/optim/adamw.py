@@ -9,7 +9,7 @@ constraints (see dist/sharding.py::zero1_state_specs).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -11,8 +11,6 @@ constraints.
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -8,19 +8,17 @@ The same Trainer drives single-device CPU integration tests and the
 from __future__ import annotations
 
 import json
-import os
 import time
 from typing import Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer, latest_step
 from repro.configs.base import ArchConfig
 from repro.data.pipeline import DataPipeline
 from repro.dist import sharding as shd
 from repro.dist.api import MeshRules, mesh_context
-from repro.dist.fault import ChipFailure, FailureInjector, StragglerWatchdog
+from repro.dist.fault import FailureInjector, StragglerWatchdog
 from repro.models.api import Model
 from repro.optim import make_optimizer, warmup_cosine
 from repro.train.step import make_train_step

@@ -16,7 +16,6 @@ global pre-partition FLOPs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 __all__ = ["V5E", "RooflineTerms", "roofline_from_costs", "model_flops"]
 

@@ -1,0 +1,479 @@
+"""Static schedule analyzer (repro.core.analysis): verdict lattice,
+single-source VMEM budget, engine pre-filter, dispatch guard, and the
+audit CLI.  Deterministic variants; the hypothesis property suite lives
+in ``test_analysis_properties.py``."""
+
+import itertools
+import json
+import math
+import os
+import sys
+
+import pytest
+
+from repro.core import (
+    AnalyticalTPUCost,
+    CountingCost,
+    FlashAttnConfigSpace,
+    GemmConfigSpace,
+    MeasureEngine,
+    MeasureStats,
+    TilingState,
+    TrialJournal,
+    TuningRecords,
+    workload_key,
+    workload_key_for,
+)
+from repro.core.analysis import (
+    ILLEGAL,
+    OK,
+    WASTEFUL,
+    AnalysisResult,
+    ScheduleAnalyzer,
+    analyzer_for_backend,
+    dtype_in_bytes,
+    flash_working_set_bytes,
+    gemm_working_set_bytes,
+    should_prune,
+)
+from repro.core.cost.flash_analytical import FlashAnalyticalCost
+from repro.core.flash_space import FlashScheduleState
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+# -- verdict lattice ----------------------------------------------------------
+
+
+def test_enumerated_states_never_illegal_gemm(small_space):
+    an = ScheduleAnalyzer(small_space)
+    for s in itertools.islice(small_space.enumerate(), 300):
+        res = an.analyze(s)
+        assert not res.illegal, (s, res)
+
+
+def test_enumerated_states_never_illegal_flash():
+    space = FlashAttnConfigSpace(256, 256, 64)
+    an = ScheduleAnalyzer(space)
+    for s in space.enumerate():
+        res = an.analyze(s)
+        assert not res.illegal, (s, res)
+
+
+def test_structural_illegal_reasons(small_space):
+    an = ScheduleAnalyzer(small_space)
+    cases = [
+        (TilingState((64, 1, 1, 1), (64, 1), (64, 1, 1)), "row_depth"),
+        (TilingState((64, 1, 1, 1), (64, 0), (64, 1, 1, 1)), "factor_nonpositive"),
+        (TilingState((64, 1, 1, 1), (64, 2), (64, 1, 1, 1)), "product_mismatch"),
+        # block larger than the dim is a product mismatch too
+        (TilingState((1, 128, 1, 1), (64, 1), (64, 1, 1, 1)), "product_mismatch"),
+    ]
+    for st, reason in cases:
+        res = an.analyze(st)
+        assert res.verdict == ILLEGAL and res.reason == reason, (st, res)
+    # wrong row count arrives via a foreign state type
+    res = an.analyze(FlashScheduleState((64, 1), (64, 1)))
+    assert res.illegal and res.reason == "row_count"
+    # garbage factors are malformed, never an uncaught exception
+    res = an.analyze(TilingState(("a", "b", "c", "d"), (64, 1), (64, 1, 1, 1)))
+    assert res.illegal and res.reason == "malformed"
+
+
+def test_vmem_overflow_gemm():
+    space = GemmConfigSpace(4096, 4096, 4096)
+    an = ScheduleAnalyzer(space)
+    huge = TilingState((1, 4096, 1, 1), (1, 4096), (1, 4096, 1, 1))
+    res = an.analyze(huge)
+    assert res.verdict == ILLEGAL and res.reason == "vmem_overflow"
+    assert an.exceeds_vmem(huge)
+    # the oracle's cliff is the same function
+    assert AnalyticalTPUCost(space).cost(huge) == math.inf
+
+
+def test_vmem_overflow_flash_huge_seq():
+    # K/V residency means every schedule of this workload is over budget
+    space = FlashAttnConfigSpace(32768, 32768, 128)
+    an = ScheduleAnalyzer(space)
+    cost = FlashAnalyticalCost(space)
+    for s in itertools.islice(space.enumerate(), 20):
+        res = an.analyze(s)
+        assert res.verdict == ILLEGAL and res.reason == "vmem_overflow", (s, res)
+        assert cost.cost(s) == math.inf
+
+
+def test_degenerate_and_padding_verdicts(paper_space):
+    an = ScheduleAnalyzer(paper_space)
+    s0 = paper_space.initial_state()  # untiled: sub_m == block_k == sub_n == 1
+    res = an.analyze(s0)
+    assert res.verdict == WASTEFUL and res.reason == "degenerate"
+    assert should_prune(res)
+    # lane-aligned sub_n but no k/m tiling: heavy padding, not degenerate
+    s = TilingState((1024, 1, 1, 1), (1024, 1), (8, 1, 8, 16))
+    res = an.analyze(s)
+    assert res.verdict == WASTEFUL and res.reason == "padding"
+    assert not should_prune(res)
+    # a well-tiled state is OK
+    good = TilingState((8, 8, 4, 4), (8, 128), (8, 8, 4, 4))
+    assert an.analyze(good).verdict == OK
+
+
+def test_under_buffer_verdict(paper_space):
+    # disable the padding checks to expose the floor (gemm states under
+    # the floor otherwise classify as padding first)
+    an = ScheduleAnalyzer(paper_space, wasteful_padding_ratio=math.inf)
+    s = TilingState((512, 1, 2, 1), (1024, 1), (1024, 1, 1, 1))
+    res = an.analyze(s)
+    assert res.verdict == WASTEFUL and res.reason == "under_buffer"
+    assert an.vmem_bytes(s) < an.buffer_floor_bytes
+
+
+def test_should_prune_policy():
+    assert should_prune(AnalysisResult(ILLEGAL, "vmem_overflow"))
+    assert should_prune(AnalysisResult(WASTEFUL, "degenerate"))
+    assert not should_prune(AnalysisResult(WASTEFUL, "padding"))
+    assert not should_prune(AnalysisResult(WASTEFUL, "under_buffer"))
+    assert not should_prune(AnalysisResult(OK))
+
+
+# -- single-source VMEM budget ------------------------------------------------
+
+
+def test_budget_single_source_gemm(small_space):
+    cost = AnalyticalTPUCost(small_space)
+    for s in itertools.islice(small_space.enumerate(), 50):
+        ws = gemm_working_set_bytes(s.block_m, s.block_k, s.block_n, 2)
+        assert small_space.working_set_bytes(s, 2) == ws
+        assert cost.vmem_bytes(s) == ws
+        assert cost.analyzer.vmem_bytes(s) == ws
+
+
+def test_budget_single_source_flash():
+    space = FlashAttnConfigSpace(256, 256, 64)
+    cost = FlashAnalyticalCost(space)
+    for s in itertools.islice(space.enumerate(), 50):
+        ws = flash_working_set_bytes(s.block_q, s.block_kv, 256, 64, 2)
+        assert space.working_set_bytes(s, 2) == ws
+        assert cost.vmem_bytes(s) == ws
+        assert cost.analyzer.vmem_bytes(s) == ws
+
+
+def test_batch_cost_matches_scalar_with_shared_budget(paper_space):
+    """The vectorized gemm batch path uses the same budget function —
+    bit-identical to the scalar path, including the inf cliff."""
+    cost = AnalyticalTPUCost(paper_space, noise_sigma=0.1, seed=3)
+    states = list(itertools.islice(paper_space.enumerate(), 64))
+    batch = cost.batch_cost(states)
+    for s, b in zip(states, batch):
+        assert cost.cost(s) == b
+
+
+def test_analyzer_for_backend_reads_measurement_settings(small_space):
+    cost = AnalyticalTPUCost(small_space, in_bytes=4)
+    an = analyzer_for_backend(cost)
+    assert an.in_bytes == 4
+    assert an.spec is cost.spec
+    assert dtype_in_bytes("float32") == 4
+    assert dtype_in_bytes("bfloat16") == 2
+    assert dtype_in_bytes(None) == 2
+    assert dtype_in_bytes("who_knows") == 2
+
+
+# -- measurement-engine pre-filter --------------------------------------------
+
+
+def _engine(space, analyze, **kw):
+    cc = CountingCost(AnalyticalTPUCost(space))
+    return cc, MeasureEngine(cc, n_workers=8, analyze=analyze, **kw)
+
+
+def test_engine_rejects_bad_analyze_mode(small_space):
+    with pytest.raises(ValueError, match="analyze"):
+        _engine(small_space, "aggressive")
+
+
+def test_engine_prune_avoids_trials(small_space):
+    cc, eng = _engine(small_space, "prune")
+    s0 = small_space.initial_state()  # degenerate -> prunable
+    states = [s0] + list(itertools.islice(small_space.enumerate(), 3))
+    outs = eng.measure_wave(states)
+    assert len(outs) == len(states)
+    by_key = {o.state.key(): o for o in outs}
+    pruned = by_key[s0.key()]
+    assert pruned.cost == math.inf and pruned.static == "degenerate"
+    assert pruned.lane_s == 0.0 and not pruned.cache_hit
+    assert eng.stats.trials_avoided == 1
+    assert eng.stats.n_cache_hits == 0
+    assert eng.stats.n_dispatched == len(states) - 1
+    assert cc.n_measured == len(states) - 1  # never reached the backend
+    assert eng.stats.static_s > 0.0
+
+
+def test_engine_warn_measures_everything(small_space):
+    cc, eng = _engine(small_space, "warn")
+    s0 = small_space.initial_state()
+    states = [s0] + list(itertools.islice(small_space.enumerate(), 3))
+    outs = eng.measure_wave(states)
+    assert all(o.static is None for o in outs)
+    assert eng.stats.trials_avoided == 0
+    assert eng.stats.n_static_flags >= 1  # s0 flagged, still measured
+    assert cc.n_measured == len(states)
+
+
+def test_engine_off_never_touches_analyzer(small_space):
+    cc, eng = _engine(small_space, "off")
+    states = [small_space.initial_state()]
+    eng.measure_wave(states)
+    assert eng.stats.trials_avoided == 0 and eng.stats.static_s == 0.0
+    assert eng._analyzer is None  # lazily built only when consulted
+    assert cc.n_measured == 1
+
+
+def test_engine_prune_journals_static_rows(small_space, tmp_path):
+    jpath = str(tmp_path / "j.jsonl")
+    wkey = workload_key(64, 64, 64)
+    s0 = small_space.initial_state()
+    states = [s0] + list(itertools.islice(small_space.enumerate(), 2))
+    with TrialJournal(jpath) as j:
+        cc = CountingCost(AnalyticalTPUCost(small_space))
+        eng = MeasureEngine(cc, n_workers=8, journal=j, workload_key=wkey,
+                            analyze="prune")
+        eng.measure_wave(states)
+        eng.measure_wave(states)  # dedup: no duplicate static row
+    rows = [json.loads(line) for line in open(jpath)]
+    static_rows = [r for r in rows if "static" in r]
+    assert len(static_rows) == 1
+    assert static_rows[0]["k"] == s0.key()
+    assert static_rows[0]["c"] is None
+    assert static_rows[0]["static"] == "degenerate"
+    # a fresh journal skips static rows from its cost table...
+    with TrialJournal(jpath) as j2:
+        assert len(j2) == len(states) - 1
+        fp = f"{wkey}?{cc.measure_fingerprint()}"
+        assert j2.get(fp, s0.key()) is None
+        # ...so an analyze=off engine re-measures the pruned state
+        cc2 = CountingCost(AnalyticalTPUCost(small_space))
+        eng2 = MeasureEngine(cc2, n_workers=8, journal=j2, workload_key=wkey)
+        outs = [o for o in eng2.measure_wave(states) if o.state.key() == s0.key()]
+        assert not outs[0].cache_hit and math.isfinite(outs[0].cost)
+
+
+def test_verdicts_memoized_and_repeatable(small_space):
+    an = ScheduleAnalyzer(small_space)
+    an2 = ScheduleAnalyzer(small_space)
+    for s in itertools.islice(small_space.enumerate(), 40):
+        r1 = an.analyze(s)
+        assert an.analyze(s) is r1  # memoized per key
+        assert an2.analyze(s) == r1  # equal analyzers agree
+
+
+# -- trace-time dispatch guard ------------------------------------------------
+
+
+@pytest.fixture
+def clean_dispatch():
+    from repro.core.records import set_global_records
+    from repro.kernels import ops as kops
+
+    kops.reset_dispatch_stats()
+    kops.invalidate_dispatch_cache()
+    yield kops
+    set_global_records(TuningRecords())
+    kops.reset_dispatch_stats()
+
+
+def test_dispatch_refuses_illegal_record(clean_dispatch, tmp_path):
+    from repro.core.records import set_global_records
+
+    kops = clean_dispatch
+    recs = TuningRecords(str(tmp_path / "r.json"))
+    key = workload_key_for("gemm", (64, 64, 64), "bfloat16",
+                           kops.kernel_policy().cost_backend)
+    # a stale record: factor products say 128, the workload says 64
+    stale = TilingState((1, 128, 1, 1), (1, 128), (1, 128, 1, 1))
+    recs.update(key, stale, 1e-6, "g-bfs", 10)
+    set_global_records(recs)
+    assert kops.lookup_tuned_state("gemm", (64, 64, 64), "bfloat16") is None
+    assert kops.dispatch_stats()["gemm"]["static_reject"] == 1
+    # the refusal is memoized: a second lookup is a memo hit, not a re-audit
+    assert kops.lookup_tuned_state("gemm", (64, 64, 64), "bfloat16") is None
+    assert kops.dispatch_stats()["gemm"]["static_reject"] == 1
+
+
+def test_dispatch_serves_legal_record(clean_dispatch, tmp_path):
+    from repro.core.records import set_global_records
+
+    kops = clean_dispatch
+    recs = TuningRecords(str(tmp_path / "r.json"))
+    key = workload_key_for("gemm", (64, 64, 64), "bfloat16",
+                           kops.kernel_policy().cost_backend)
+    good = TilingState((4, 2, 2, 4), (1, 64), (4, 2, 2, 4))
+    recs.update(key, good, 1e-6, "g-bfs", 10)
+    set_global_records(recs)
+    st = kops.lookup_tuned_state("gemm", (64, 64, 64), "bfloat16")
+    assert st == good
+    assert kops.dispatch_stats()["gemm"].get("static_reject", 0) == 0
+
+
+# -- audit CLI ----------------------------------------------------------------
+
+
+def _write_records(path, entries):
+    with open(path, "w") as f:
+        json.dump(entries, f)
+
+
+def test_analyze_cli_passes_good_store(tmp_path):
+    from repro.launch.analyze import main
+
+    path = str(tmp_path / "good.json")
+    key = workload_key(1024, 1024, 1024)
+    _write_records(path, {
+        key: {"op": "gemm",
+              "state": [[8, 8, 4, 4], [8, 128], [8, 8, 4, 4]],
+              "cost": 1e-4},
+    })
+    assert main(["--records", path]) == 0
+
+
+def test_analyze_cli_fails_on_over_vmem_record(tmp_path):
+    from repro.launch.analyze import main
+
+    path = str(tmp_path / "bad.json")
+    key = workload_key(8192, 8192, 8192)
+    # hand-corrupted: legitimate factorization whose working set is ~1 GiB
+    _write_records(path, {
+        key: {"op": "gemm",
+              "state": [[1, 8192, 1, 1], [1, 8192], [1, 8192, 1, 1]],
+              "cost": 1e-4},
+    })
+    assert main(["--records", path]) == 1
+
+
+def test_analyze_cli_fails_on_stale_and_cross_op_records(tmp_path):
+    from repro.launch.analyze import main
+
+    stale = str(tmp_path / "stale.json")
+    _write_records(stale, {
+        workload_key(1024, 1024, 1024): {
+            "op": "gemm",
+            "state": [[1, 2048, 1, 1], [1, 2048], [1, 2048, 1, 1]],
+            "cost": 1e-4},
+    })
+    assert main(["--records", stale]) == 1
+    crossed = str(tmp_path / "crossed.json")
+    _write_records(crossed, {
+        workload_key(1024, 1024, 1024): {
+            "op": "flash",
+            "state": [[8, 128], [8, 128]],
+            "cost": 1e-4},
+    })
+    assert main(["--records", crossed]) == 1
+
+
+def test_analyze_cli_journal_finite_cost_for_illegal(tmp_path):
+    from repro.launch.analyze import main
+
+    jpath = str(tmp_path / "j.jsonl")
+    key = workload_key(8192, 8192, 8192)
+    lists = [[1, 8192, 1, 1], [1, 8192], [1, 8192, 1, 1]]
+    skey = "1,8192,1,1|1,8192|1,8192,1,1"
+    with open(jpath, "w") as f:
+        # an inf row for an illegal schedule is consistent (fine)...
+        f.write(json.dumps({"w": key + "?r1", "k": skey, "s": lists,
+                            "op": "gemm", "c": None, "fail": True}) + "\n")
+    assert main(["--journal", jpath]) == 0
+    with open(jpath, "a") as f:
+        # ...a finite one contradicts every backend's VMEM guard
+        f.write(json.dumps({"w": key + "?r1", "k": skey, "s": lists,
+                            "op": "gemm", "c": 0.001}) + "\n")
+    assert main(["--journal", jpath]) == 1
+
+
+def test_analyze_cli_counts_static_rows_as_clean(tmp_path, small_space):
+    from repro.launch.analyze import main
+
+    jpath = str(tmp_path / "j.jsonl")
+    wkey = workload_key(64, 64, 64)
+    with TrialJournal(jpath) as j:
+        eng = MeasureEngine(
+            CountingCost(AnalyticalTPUCost(small_space)), n_workers=4,
+            journal=j, workload_key=wkey, analyze="prune",
+        )
+        eng.measure_wave(
+            [small_space.initial_state()]
+            + list(itertools.islice(small_space.enumerate(), 2))
+        )
+    assert main(["--journal", jpath]) == 0
+
+
+def test_analyze_cli_nothing_to_audit(tmp_path, monkeypatch):
+    from repro.launch.analyze import main
+
+    monkeypatch.chdir(tmp_path)
+    assert main([]) == 0
+
+
+def test_tune_cli_unknown_op_errors(monkeypatch, capsys):
+    from repro.launch import tune
+
+    monkeypatch.setattr(sys, "argv", ["tune", "--op", "conv9000"])
+    with pytest.raises(SystemExit) as exc:
+        tune.main()
+    assert exc.value.code == 2
+    err = capsys.readouterr().err
+    assert "operator registry" in err and "gemm" in err
+
+
+# -- interpret-mode agreement -------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("op,dims", [("gemm", (64, 64, 64)),
+                                     ("flash", (128, 128, 64))])
+def test_verdicts_agree_with_pallas_interpret_compile(op, dims):
+    """Non-ILLEGAL enumerated states compile and run under Pallas
+    interpret mode; a structurally broken state does not."""
+    jax = pytest.importorskip("jax")
+    from repro.core import get_op
+
+    spec = get_op(op)
+    space = spec.make_space(dims)
+    an = ScheduleAnalyzer(space)
+    operands = spec.timed_operands(space, "float32", seed=0)
+    states = list(itertools.islice(space.enumerate(), 3))
+    for s in states:
+        assert not an.analyze(s).illegal
+        out = spec.pallas_run(space, s, operands, interpret=True)
+        assert all(
+            bool(jax.numpy.isfinite(x).all()) for x in jax.tree.leaves(out)
+        )
+    # corrupt a block factor: product mismatch -> ILLEGAL, and Pallas
+    # agrees (the 0.75x block no longer divides the real operands; a
+    # *doubled* block would be silently clamped by the flash kernel)
+    rows = states[0].as_lists()
+    rows[0][-1] = rows[0][-1] // 4 * 3
+    bad = space.state_from_rows(rows)
+    assert an.analyze(bad).illegal
+    with pytest.raises(Exception):
+        spec.pallas_run(space, bad, operands, interpret=True)
+
+
+# -- search neutrality (the fig7 protocol in miniature) -----------------------
+
+
+def test_gbfs_prune_reaches_equal_best(paper_space):
+    """``--analyze prune`` on the paper's 1024^3 G-BFS protocol: same
+    final best as unfiltered, with trials actually avoided."""
+    sys.path.insert(0, os.path.abspath(REPO))
+    from benchmarks.common import run_tuner
+    from repro.core import Budget
+
+    budget = Budget(max_fraction=0.0002)
+    res_off, final_off = run_tuner(paper_space, "g-bfs", budget, seed=0)
+    stats = MeasureStats()
+    res_pr, final_pr = run_tuner(paper_space, "g-bfs", budget, seed=0,
+                                 analyze="prune", stats=stats)
+    assert final_pr == final_off
+    assert res_pr.n_trials == res_off.n_trials  # pruned trials still charged
+    assert stats.trials_avoided > 0

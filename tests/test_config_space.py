@@ -3,7 +3,6 @@ invariants.  Property-based (hypothesis) variants live in
 ``test_config_space_properties.py`` so this module collects without the
 optional dependency."""
 
-import math
 
 from repro.core import GemmConfigSpace, TilingState
 from repro.core.config_space import compositions_pow2, count_compositions_pow2

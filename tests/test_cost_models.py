@@ -12,7 +12,6 @@ from repro.core.cost.measured import PallasInterpretCost, XLATimedCost
 def test_vmem_cliff(small_space):
     """Configurations whose working set exceeds VMEM fail like a TVM
     measurement failure (inf)."""
-    cost = AnalyticalTPUCost(small_space)
     # block everything into one giant tile on a big space -> exceeds VMEM
     big = GemmConfigSpace(4096, 4096, 4096)
     cost_big = AnalyticalTPUCost(big)

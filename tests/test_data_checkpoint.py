@@ -48,7 +48,8 @@ def test_pipeline_prefetch_and_resume():
     ds = SyntheticLM(vocab_size=100, seq_len=4, seed=0)
     p = DataPipeline(ds, global_batch=4, prefetch=2)
     it = iter(p)
-    batches = [next(it) for _ in range(3)]
+    for _ in range(3):
+        next(it)
     p.stop()
     state = p.state_dict()
     p2 = DataPipeline(ds, global_batch=4, start_step=0)

@@ -7,7 +7,6 @@ import os
 import numpy as np
 import pytest
 
-import jax
 import jax.numpy as jnp
 
 pytest.importorskip(

@@ -1,10 +1,9 @@
 """HLO collective parser + roofline math unit tests."""
 
 import numpy as np
-import pytest
 
 from repro.utils.hlo import collective_stats, parse_shape_bytes
-from repro.utils.roofline import V5E, model_flops, roofline_from_costs
+from repro.utils.roofline import model_flops, roofline_from_costs
 
 
 def test_parse_shape_bytes():

@@ -263,8 +263,6 @@ def test_engine_folds_compile_stats_into_measure_stats(space):
 
 
 def test_journal_caches_failed_builds(tmp_path):
-    space = GemmConfigSpace(4096, 4096, 4096)
-    cost = AnalyticalTPUCost(space)
     jpath = str(tmp_path / "inf.jsonl")
     j = TrialJournal(jpath)
     wkey = "gemm/m4096k4096n4096/bfloat16/analytical_tpu_v5e"

@@ -185,7 +185,6 @@ def test_moe_aux_and_dispatch():
 def test_moe_matches_dense_expert_sum_with_ample_capacity():
     """With capacity >= tokens, sorted dispatch == explicit per-token
     expert evaluation."""
-    import dataclasses
 
     from repro.models import common as cm
     from repro.models.transformer import init_moe, moe_apply

@@ -14,7 +14,6 @@ pytest.importorskip(
     "repro.dist.api", reason="repro.dist.api not present in this tree yet"
 )
 
-from repro.configs.registry import ARCHS
 from repro.dist.api import MeshRules, resolve_spec
 
 SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -6,7 +6,6 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import (
-    AnalyticalTPUCost,
     Budget,
     GemmConfigSpace,
     GemmWorkload,

@@ -2,13 +2,10 @@
 resumes exactly, failure injection + restart loop works, straggler
 watchdog observes steps."""
 
-import glob
-import os
 
 import numpy as np
 import pytest
 
-import jax
 
 pytest.importorskip(
     "repro.dist.fault",
@@ -17,7 +14,7 @@ pytest.importorskip(
 
 from repro.configs.registry import get_arch
 from repro.data.pipeline import DataPipeline, SyntheticLM
-from repro.dist.fault import ChipFailure, FailureInjector, StragglerWatchdog, run_with_restarts
+from repro.dist.fault import FailureInjector, StragglerWatchdog, run_with_restarts
 from repro.train.trainer import Trainer
 
 
