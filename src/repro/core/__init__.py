@@ -40,6 +40,14 @@ from .executor import (
     ThreadExecutor,
     make_executor,
 )
+from .fault import (
+    PERMANENT_KINDS,
+    TRANSIENT_KINDS,
+    FaultInjectionCost,
+    FaultPlan,
+    RetryPolicy,
+    classify_error,
+)
 from .flash_space import FlashAttnConfigSpace, FlashScheduleState
 from .measure import MeasureEngine, MeasureOutcome, MeasureStats
 from .ops import OPS, OpSpec, get_op, op_names, register_op
@@ -54,6 +62,7 @@ from .records import (
     workload_key_for,
 )
 from .session import ArchTuneReport, GemmWorkload, TuningSession, Workload
+from .snapshot import TuneCheckpointer, TuneInterrupted
 from .space import FactoredSearchSpace, SearchSpace, State
 from .tuners import (
     TUNERS,
@@ -103,6 +112,14 @@ __all__ = [
     "MeasureEngine",
     "MeasureOutcome",
     "MeasureStats",
+    "PERMANENT_KINDS",
+    "TRANSIENT_KINDS",
+    "FaultInjectionCost",
+    "FaultPlan",
+    "RetryPolicy",
+    "classify_error",
+    "TuneCheckpointer",
+    "TuneInterrupted",
     "TrialJournal",
     "TuningRecords",
     "global_records",

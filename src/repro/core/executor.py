@@ -75,6 +75,11 @@ class LaneResult:
     #: lanes only — in-process executors let the engine read the backend
     #: directly); see ``CostBackend.compile_stats``.
     compile: Optional[dict] = None
+    #: failure taxonomy (see ``repro.core.fault``): ``"crash"`` /
+    #: ``"timeout"`` / ``"spawn"`` are transient (retry-able), ``"raise"``
+    #: is permanent.  ``None`` on success; executors that only set
+    #: ``error`` are classified by the engine via ``classify_error``.
+    kind: Optional[str] = None
 
 
 class LaneExecutor(abc.ABC):
@@ -106,16 +111,30 @@ class LaneExecutor(abc.ABC):
 
 class SimulatedExecutor(LaneExecutor):
     """The historical in-thread path: scalar ``cost`` for single-miss
-    waves (n_workers=1 parity), ``batch_cost`` otherwise."""
+    waves (n_workers=1 parity), ``batch_cost`` otherwise.  A backend
+    exception is isolated per lane as a ``kind="raise"`` result rather
+    than unwinding the whole tuning session — the batched path falls
+    back to per-state scalar calls to attribute the raise (legal because
+    ``batch_cost(states)[i] == cost(states[i])`` by contract)."""
 
     name = "sim"
     real_time = False
 
+    def _lane(self, backend, s) -> LaneResult:
+        try:
+            return LaneResult(cost=backend.cost(s))
+        except BaseException as e:  # noqa: BLE001 — lane isolation
+            return LaneResult(
+                cost=math.inf, error=f"{type(e).__name__}: {e}", kind="raise"
+            )
+
     def run_wave(self, backend, states, timeout_s=None):
         if len(states) == 1:
-            costs = [backend.cost(states[0])]
-        else:
+            return [self._lane(backend, states[0])]
+        try:
             costs = list(backend.batch_cost(states))
+        except BaseException:  # noqa: BLE001 — re-run per lane to attribute
+            return [self._lane(backend, s) for s in states]
         return [LaneResult(cost=c) for c in costs]
 
 
@@ -148,6 +167,7 @@ class ThreadExecutor(LaneExecutor):
                     cost=math.inf,
                     wall_s=time.perf_counter() - t0,
                     error=f"{type(e).__name__}: {e}",
+                    kind="raise",
                 )
 
         threads = [
@@ -173,6 +193,7 @@ class ThreadExecutor(LaneExecutor):
                         cost=math.inf,
                         wall_s=time.perf_counter() - t_start,
                         error=f"lane timeout after {timeout:g}s",
+                        kind="timeout",
                     )
                 )
             else:
@@ -198,6 +219,18 @@ def _worker_main(conn) -> None:
             return
         if job == "ping":  # liveness probe (see ProcessExecutor.warm_up)
             conn.send("pong")
+            continue
+        if job[0] == "prewarm":
+            # build the backend ahead of the first measurement so lane
+            # wall-clocks never include the worker's jax import + backend
+            # construction (see ProcessExecutor.warm_up(backend=...))
+            try:
+                key = repr(job[1])
+                if key not in backends:
+                    backends[key] = backend_from_spec(job[1])
+            except BaseException:  # noqa: BLE001 — surface it on the real job
+                pass
+            conn.send("prewarmed")
             continue
         spec, state_lists = job
         backend, before = None, None
@@ -252,12 +285,17 @@ class _Worker:
         return self.proc.is_alive()
 
     def kill(self) -> None:
+        # idempotent: a lane may be killed at timeout AND reaped again
+        # by the next wave's _ensure_workers
         try:
             self.proc.terminate()
             self.proc.join(timeout=2.0)
         except (ValueError, OSError):
             pass
-        self.conn.close()
+        try:
+            self.conn.close()
+        except OSError:
+            pass
 
     def stop(self) -> None:
         """Graceful: sentinel, short join, then terminate."""
@@ -292,25 +330,90 @@ class ProcessExecutor(LaneExecutor):
         timeout_s: Optional[float] = 60.0,
         mp_context: Optional[str] = None,
         spawn_timeout_s: float = 120.0,
+        max_respawns: int = 3,
+        respawn_backoff_s: float = 0.05,
     ):
         self.timeout_s = timeout_s  # per-lane kill timeout; None = wait forever
         self.spawn_timeout_s = spawn_timeout_s
+        # per-lane-slot respawn budget: after ``max_respawns`` worker
+        # deaths a slot stops burning processes and degrades to the
+        # in-thread (ThreadExecutor) path for the rest of the run — a
+        # deterministic crasher must not respawn forever, once per wave
+        self.max_respawns = max(0, int(max_respawns))
+        self.respawn_backoff_s = respawn_backoff_s
         if mp_context is None:
             methods = multiprocessing.get_all_start_methods()
             mp_context = "forkserver" if "forkserver" in methods else "spawn"
         self._ctx = multiprocessing.get_context(mp_context)
-        self._workers: list[_Worker] = []
+        # positional lane slots: slot i keeps its respawn count across
+        # worker generations (None = never spawned, or degraded)
+        self._workers: list[Optional[_Worker]] = []
+        self._respawns: list[int] = []
+        self._degraded: set[int] = set()
+        self.n_respawns = 0  # lifetime worker respawns (all slots)
+        self.n_spare_adoptions = 0  # deaths absorbed by a warm spare
+
+    def fault_stats(self) -> dict:
+        """Lifetime hardening counters; the engine snapshot-diffs these
+        per wave into :class:`~repro.core.measure.MeasureStats`."""
+        return {
+            "n_respawns": self.n_respawns,
+            "n_degraded_lanes": len(self._degraded),
+            "n_spare_adoptions": self.n_spare_adoptions,
+        }
 
     def _ensure_workers(self, n: int) -> None:
-        """Reap dead workers and spawn up to ``n``, blocking until fresh
-        ones answer a liveness ping — interpreter start-up and repro
-        imports must never count against a lane's measurement timeout."""
-        self._workers = [w for w in self._workers if w.alive()]
-        fresh: list[_Worker] = []
+        """Reap dead workers and (re)spawn slots up to ``n``, blocking
+        until fresh ones answer a liveness ping — interpreter start-up
+        and repro imports must never count against a lane's measurement
+        timeout.  Each observed worker death consumes one respawn from
+        its slot's budget, with exponential backoff between respawns;
+        a slot whose budget is exhausted is degraded (logged once) and
+        served in-thread by ``run_wave`` from then on."""
         while len(self._workers) < n:
-            w = _Worker(self._ctx)
-            self._workers.append(w)
-            fresh.append(w)
+            self._workers.append(None)
+            self._respawns.append(0)
+        fresh: list[_Worker] = []
+        for i in range(n):
+            if i in self._degraded:
+                continue
+            w = self._workers[i]
+            if w is not None and w.alive():
+                continue
+            if w is not None:
+                # an observed death: reap it and charge the slot budget
+                w.kill()
+                self._workers[i] = None
+                self._respawns[i] += 1
+                self.n_respawns += 1
+                if self._respawns[i] > self.max_respawns:
+                    self._degraded.add(i)
+                    print(
+                        f"[executor] lane {i}: worker died "
+                        f"{self._respawns[i]} times (respawn budget "
+                        f"{self.max_respawns} exhausted); degrading to "
+                        "in-thread measurement for the rest of the run"
+                    )
+                    continue
+                # hot-spare adoption: ``warm_up(n_lanes + spares)`` parks
+                # warm workers beyond the wave; a dead lane adopts one
+                # instantly instead of paying a cold interpreter start-up
+                # on the respawn path (the death still charges the budget)
+                for j in range(n, len(self._workers)):
+                    cand = self._workers[j]
+                    if j not in self._degraded and cand is not None and cand.alive():
+                        self._workers[i] = cand
+                        self._workers[j] = None
+                        self.n_spare_adoptions += 1
+                        break
+                if self._workers[i] is not None:
+                    continue
+                if self.respawn_backoff_s > 0:
+                    time.sleep(
+                        self.respawn_backoff_s * (2.0 ** (self._respawns[i] - 1))
+                    )
+            self._workers[i] = w2 = _Worker(self._ctx)
+            fresh.append(w2)
         for w in fresh:
             try:
                 w.conn.send("ping")
@@ -325,6 +428,8 @@ class ProcessExecutor(LaneExecutor):
                 pass  # dead at birth: run_wave resolves its lane to inf
 
     def run_wave(self, backend, states, timeout_s=None):
+        import threading
+
         spec = backend.worker_spec()
         if spec is None:
             raise ValueError(
@@ -334,21 +439,59 @@ class ProcessExecutor(LaneExecutor):
             )
         timeout = timeout_s if timeout_s is not None else self.timeout_s
         self._ensure_workers(len(states))
-        lanes = self._workers[: len(states)]
-        sent_t: list[float] = []
+        results: list[Optional[LaneResult]] = [None] * len(states)
+
+        # degraded slots run the ThreadExecutor path on the engine-side
+        # backend, overlapping the process lanes dispatched below
+        def deg_lane(box: list, s: State, t0: float) -> None:
+            try:
+                c = backend.cost(s)
+                box[0] = LaneResult(cost=c, wall_s=time.perf_counter() - t0)
+            except BaseException as e:  # noqa: BLE001 — lane isolation
+                box[0] = LaneResult(
+                    cost=math.inf,
+                    wall_s=time.perf_counter() - t0,
+                    error=f"{type(e).__name__}: {e}",
+                    kind="raise",
+                )
+
+        deg: dict[int, tuple] = {}
+        for i, s in enumerate(states):
+            if i in self._degraded:
+                box: list = [None]
+                t0 = time.perf_counter()
+                th = threading.Thread(
+                    target=deg_lane, args=(box, s, t0), daemon=True,
+                    name=f"degraded-lane-{i}",
+                )
+                th.start()
+                deg[i] = (th, box, t0)
+        sent_t: list[float] = [0.0] * len(states)
         dead_on_send: set[int] = set()
-        for i, (w, s) in enumerate(zip(lanes, states)):
+        for i, s in enumerate(states):
+            if i in deg:
+                continue
+            w = self._workers[i]
+            if w is None:
+                dead_on_send.add(i)
+                sent_t[i] = time.perf_counter()
+                continue
             try:
                 w.conn.send((spec, s.as_lists()))
             except (BrokenPipeError, OSError):
                 dead_on_send.add(i)
-            sent_t.append(time.perf_counter())
-        results: list[LaneResult] = []
-        for i, w in enumerate(lanes):
+            sent_t[i] = time.perf_counter()
+        for i in range(len(states)):
+            if i in deg:
+                continue
+            w = self._workers[i]
             if i in dead_on_send:
-                w.kill()
-                results.append(
-                    LaneResult(cost=math.inf, error="worker died before dispatch")
+                if w is not None:
+                    w.kill()
+                results[i] = LaneResult(
+                    cost=math.inf,
+                    error="worker died before dispatch",
+                    kind="spawn",
                 )
                 continue
             remaining = (
@@ -359,53 +502,95 @@ class ProcessExecutor(LaneExecutor):
             try:
                 if not w.conn.poll(remaining):
                     w.kill()
-                    results.append(
-                        LaneResult(
-                            cost=math.inf,
-                            wall_s=time.perf_counter() - sent_t[i],
-                            error=f"lane timeout after {timeout:g}s (worker killed)",
-                        )
+                    results[i] = LaneResult(
+                        cost=math.inf,
+                        wall_s=time.perf_counter() - sent_t[i],
+                        error=f"lane timeout after {timeout:g}s (worker killed)",
+                        kind="timeout",
                     )
                     continue
                 msg = w.conn.recv()
             except (EOFError, OSError):
                 w.kill()
-                results.append(
-                    LaneResult(
-                        cost=math.inf,
-                        wall_s=time.perf_counter() - sent_t[i],
-                        error="worker crashed mid-measurement",
-                    )
+                results[i] = LaneResult(
+                    cost=math.inf,
+                    wall_s=time.perf_counter() - sent_t[i],
+                    error="worker crashed mid-measurement",
+                    kind="crash",
                 )
                 continue
             if msg[0] == "ok":
-                results.append(
-                    LaneResult(
-                        cost=msg[1],
-                        wall_s=msg[2],
-                        compile=msg[3] if len(msg) > 3 else None,
-                    )
+                results[i] = LaneResult(
+                    cost=msg[1],
+                    wall_s=msg[2],
+                    compile=msg[3] if len(msg) > 3 else None,
                 )
             else:
-                results.append(
-                    LaneResult(
-                        cost=math.inf,
-                        wall_s=time.perf_counter() - sent_t[i],
-                        error=msg[1],
-                        compile=msg[2] if len(msg) > 2 else None,
-                    )
+                results[i] = LaneResult(
+                    cost=math.inf,
+                    wall_s=time.perf_counter() - sent_t[i],
+                    error=msg[1],
+                    kind="raise",
+                    compile=msg[2] if len(msg) > 2 else None,
                 )
+        for i, (th, box, t0) in deg.items():
+            remaining = (
+                None
+                if timeout is None
+                else max(0.0, t0 + timeout - time.perf_counter())
+            )
+            th.join(remaining)
+            if th.is_alive():  # abandoned, same as ThreadExecutor
+                results[i] = LaneResult(
+                    cost=math.inf,
+                    wall_s=time.perf_counter() - t0,
+                    error=f"lane timeout after {timeout:g}s (degraded lane)",
+                    kind="timeout",
+                )
+            else:
+                results[i] = box[0]
         return results
 
-    def warm_up(self, n_lanes: int) -> None:
+    def warm_up(self, n_lanes: int, backend=None) -> None:
         """Pre-spawn ``n_lanes`` ready workers so not even the *first*
         wave's wall-clock includes process start-up (``run_wave`` already
-        excludes start-up from lane timeouts via ``_ensure_workers``)."""
+        excludes start-up from lane timeouts via ``_ensure_workers``).
+
+        With ``backend``, each worker also pre-builds the backend from
+        its ``worker_spec()`` — the worker-side jax import, backend
+        construction, and persistent-cache open all happen here instead
+        of inside the first measurement wave.  Spawning more lanes than
+        the wave width parks warm spares that dead lanes adopt instantly
+        (see ``_ensure_workers``)."""
         self._ensure_workers(n_lanes)
+        if backend is None:
+            return
+        spec = backend.worker_spec()
+        if spec is None:
+            return
+        warmed: list[_Worker] = []
+        for w in self._workers[:n_lanes]:
+            if w is None or not w.alive():
+                continue
+            try:
+                w.conn.send(("prewarm", spec))
+                warmed.append(w)
+            except (BrokenPipeError, OSError):
+                pass
+        deadline = time.perf_counter() + self.spawn_timeout_s
+        for w in warmed:
+            try:
+                if w.conn.poll(max(0.0, deadline - time.perf_counter())):
+                    w.conn.recv()
+            except (EOFError, OSError):
+                pass  # dead during prewarm: run_wave resolves it later
 
     def close(self) -> None:
         workers, self._workers = self._workers, []
+        self._respawns = []
         for w in workers:
+            if w is None:
+                continue
             if w.alive():
                 w.stop()
             else:

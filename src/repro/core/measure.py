@@ -47,7 +47,8 @@ from typing import Optional, Sequence
 from .analysis import ScheduleAnalyzer, analyzer_for_backend, should_prune
 from .space import State
 from .cost.base import CostBackend
-from .executor import LaneExecutor, SimulatedExecutor
+from .executor import LaneExecutor, LaneResult, SimulatedExecutor
+from .fault import RetryPolicy, TRANSIENT_KINDS, classify_error
 from .records import TrialJournal
 
 __all__ = ["MeasureEngine", "MeasureOutcome", "MeasureStats"]
@@ -63,6 +64,11 @@ class MeasureOutcome:
     lane_s: float  # lane occupancy: simulated model or measured wall
     error: Optional[str] = None  # lane failure note (crash/timeout)
     static: Optional[str] = None  # analyzer verdict reason if pruned pre-dispatch
+    kind: Optional[str] = None  # failure taxonomy (see repro.core.fault)
+    attempts: int = 1  # measurement attempts spent (retries included)
+    #: retries exhausted on transient failures — the ``inf`` says "the
+    #: lanes kept dying", NOT "this schedule is infeasible"
+    failed_transient: bool = False
 
 
 @dataclasses.dataclass
@@ -90,6 +96,18 @@ class MeasureStats:
     trials_avoided: int = 0  # candidates rejected without occupying a lane
     n_static_flags: int = 0  # advisory verdicts (warn mode, or non-pruned WASTEFUL)
     static_s: float = 0.0  # wall seconds spent in the analyzer
+    # -- fault tolerance (see repro.core.fault; zero without a RetryPolicy) --
+    n_retries: int = 0  # transient-failure re-dispatches
+    retry_backoff_s: float = 0.0  # backoff charged to the clock by retries
+    n_transient_recovered: int = 0  # candidates that succeeded on a retry
+    #: candidates whose retries were exhausted on transient failures —
+    #: distinct from infeasible: the lanes kept dying, the schedule was
+    #: never actually judged (these are counted inside ``n_failures`` too)
+    n_failed_transient: int = 0
+    n_stragglers: int = 0  # lanes ≥ straggler_factor × wave median wall
+    n_respawns: int = 0  # worker processes respawned after a death
+    n_spare_adoptions: int = 0  # deaths absorbed by a pre-warmed spare worker
+    n_degraded_lanes: int = 0  # lanes that fell back to in-thread measurement
 
     @property
     def n_measured(self) -> int:
@@ -133,6 +151,8 @@ class MeasureEngine:
         reload_every: int = 0,
         analyze: str = "off",
         analyzer: Optional[ScheduleAnalyzer] = None,
+        retry: Optional[RetryPolicy] = None,
+        straggler_factor: float = 8.0,
     ):
         if analyze not in ("off", "warn", "prune"):
             raise ValueError(
@@ -173,6 +193,15 @@ class MeasureEngine:
         # trials_avoided; the trial is still charged by TuningContext)
         self.analyze = analyze
         self._analyzer = analyzer
+        # fault tolerance: with a RetryPolicy, transient lane failures
+        # (crash/timeout/spawn/corrupt — see repro.core.fault) are
+        # re-dispatched with backoff instead of surfacing inf to the
+        # tuner; None keeps the historical fail-fast semantics exactly
+        self.retry = retry if (retry is not None and retry.enabled) else None
+        # a successful lane whose wall exceeds straggler_factor × the
+        # wave median is counted in stats.n_stragglers (real executors
+        # with ≥3 lanes only — detection, not re-measurement)
+        self.straggler_factor = straggler_factor
 
     @property
     def analyzer(self) -> ScheduleAnalyzer:
@@ -189,6 +218,104 @@ class MeasureEngine:
         return self.overhead_s + (
             0.0 if math.isinf(cost) else min(cost, self.timeout_s)
         )
+
+    # -- fault handling ------------------------------------------------------
+    def _lane_kind(self, lane: LaneResult) -> Optional[str]:
+        """Classify one lane result.  ``None`` means the backend actually
+        judged the schedule (including a failed build, which reports as
+        ``inf`` cost with no error).  A lane that hands back a value no
+        real measurement can produce (NaN / negative / non-numeric) is a
+        ``corrupt`` transient — journaling it would poison the cache."""
+        if lane.error is not None:
+            return lane.kind or classify_error(lane.error)
+        try:
+            c = float(lane.cost)
+        except (TypeError, ValueError):
+            return "corrupt"
+        if math.isnan(c) or c < 0:
+            return "corrupt"
+        return None
+
+    def _finalize(
+        self, s: State, lane: LaneResult, kind: Optional[str],
+        n_attempts: int, lane_s: float,
+    ) -> MeasureOutcome:
+        """Book one candidate's final verdict after any retries."""
+        if kind is None:
+            cost = float(lane.cost)
+            if n_attempts > 1:
+                self.stats.n_transient_recovered += 1
+            if self.journal is not None and self.journal_key is not None:
+                self.journal.record(
+                    self.journal_key, s, cost, op=self.backend.op,
+                    attempts=n_attempts,
+                )
+            return MeasureOutcome(
+                s, cost, False, lane_s, None,
+                kind=None if math.isfinite(cost) else "build",
+                attempts=n_attempts,
+            )
+        # executor-level failure (crash/timeout/spawn/raise/corrupt)
+        self.stats.n_failures += 1
+        failed_transient = kind in TRANSIENT_KINDS
+        if failed_transient:
+            self.stats.n_failed_transient += 1
+        if (
+            self.retry is not None
+            and self.journal is not None
+            and self.journal_key is not None
+        ):
+            # failure provenance: permanent kinds are cacheable inf rows;
+            # transient kinds are audit-only rows that never enter the
+            # cost table — a worker death must not be cached as "this
+            # config is infeasible".  Without a RetryPolicy the
+            # historical contract holds: executor failures are counted
+            # but never journaled.
+            self.journal.record_failure(
+                self.journal_key, s, kind, attempts=n_attempts,
+                op=self.backend.op,
+            )
+        return MeasureOutcome(
+            s, math.inf, False, lane_s, lane.error, kind=kind,
+            attempts=n_attempts, failed_transient=failed_transient,
+        )
+
+    def _fold_compile(
+        self, lanes: Sequence[LaneResult], compile_before: Optional[dict]
+    ) -> None:
+        """Attribute one sub-wave's build-cache increments."""
+        lane_deltas = [l.compile for l in lanes if l.compile]
+        if lane_deltas:
+            # process lanes: each job shipped its worker-side delta
+            for d in lane_deltas:
+                self.stats.add_compile_delta(d)
+        elif compile_before is not None:
+            # in-process executors share this backend object: the
+            # wave's increment is the snapshot difference
+            after = self.backend.compile_stats()
+            self.stats.add_compile_delta(
+                {k: after[k] - compile_before.get(k, 0) for k in after}
+            )
+
+    def _note_stragglers(self, lanes: Sequence[LaneResult]) -> None:
+        """Count successful lanes whose measured wall dwarfs the wave
+        median (preempted host, contended device).  Detection only — the
+        value is kept; re-measuring belongs to a noise model, not here."""
+        if not self.executor.real_time or len(lanes) < 3:
+            return
+        walls = sorted(l.wall_s for l in lanes if l.error is None)
+        if len(walls) < 3:
+            return
+        med = walls[len(walls) // 2]
+        if med <= 0.0:
+            return
+        for l in lanes:
+            if (
+                l.error is None
+                and l.wall_s > self.straggler_factor * med
+                and l.wall_s > 0.05
+            ):
+                self.stats.n_stragglers += 1
 
     # -- dispatch ------------------------------------------------------------
     def measure_wave(self, states: Sequence[State]) -> list[MeasureOutcome]:
@@ -249,38 +376,67 @@ class MeasureEngine:
             miss_idx = kept
             self.stats.static_s += time.perf_counter() - t0
         if miss_idx:
-            misses = [states[i] for i in miss_idx]
             # NOTE: self.timeout_s is the *simulated charging cap* (a slow
             # config charges at most that much search clock); the real
             # executors own their kill timeout separately — conflating the
             # two would kill legitimately slow measurements (XLA compiles)
-            compile_before = self.backend.compile_stats()
-            lanes = self.executor.run_wave(self.backend, misses)
-            lane_deltas = [l.compile for l in lanes if l.compile]
-            if lane_deltas:
-                # process lanes: each job shipped its worker-side delta
-                for d in lane_deltas:
-                    self.stats.add_compile_delta(d)
-            elif compile_before is not None:
-                # in-process executors share this backend object: the
-                # wave's increment is the snapshot difference
-                after = self.backend.compile_stats()
-                self.stats.add_compile_delta(
-                    {k: after[k] - compile_before.get(k, 0) for k in after}
-                )
-            for i, s, lane in zip(miss_idx, misses, lanes):
-                lane_s = (
-                    lane.wall_s if self.executor.real_time else self.lane_time(lane.cost)
-                )
-                outcomes[i] = MeasureOutcome(s, lane.cost, False, lane_s, lane.error)
-                if lane.error is not None:
-                    # executor-level failure (crash/timeout/raise): count
-                    # it, but never journal it — a transient worker death
-                    # must not be cached as "this config is infeasible"
-                    self.stats.n_failures += 1
-                elif self.journal is not None and self.journal_key is not None:
-                    self.journal.record(
-                        self.journal_key, s, lane.cost, op=self.backend.op
+            fault_fn = getattr(self.executor, "fault_stats", None)
+            fault_before = fault_fn() if callable(fault_fn) else None
+            attempts = dict.fromkeys(miss_idx, 0)
+            acc_lane_s = dict.fromkeys(miss_idx, 0.0)
+            pending = list(miss_idx)
+            while pending:
+                sub = [states[i] for i in pending]
+                compile_before = self.backend.compile_stats()
+                lanes = self.executor.run_wave(self.backend, sub)
+                self._fold_compile(lanes, compile_before)
+                self._note_stragglers(lanes)
+                nxt: list[int] = []
+                backoffs: list[float] = []
+                for i, lane in zip(pending, lanes):
+                    s = states[i]
+                    attempts[i] += 1
+                    kind = self._lane_kind(lane)
+                    acc_lane_s[i] += (
+                        lane.wall_s
+                        if self.executor.real_time
+                        else self.lane_time(lane.cost if kind is None else math.inf)
+                    )
+                    if (
+                        self.retry is not None
+                        and kind in TRANSIENT_KINDS
+                        and attempts[i] < self.retry.max_attempts
+                    ):
+                        # transient: the lane died, the schedule was never
+                        # judged — re-queue into a follow-up wave with
+                        # deterministic backoff instead of surfacing inf
+                        delay = self.retry.delay_s(s.key(), attempts[i])
+                        self.stats.n_retries += 1
+                        self.stats.retry_backoff_s += delay
+                        acc_lane_s[i] += delay
+                        backoffs.append(delay)
+                        nxt.append(i)
+                        continue
+                    outcomes[i] = self._finalize(
+                        s, lane, kind, attempts[i], acc_lane_s[i]
+                    )
+                if nxt and backoffs and self.executor.real_time:
+                    # the retried lanes redispatch as one wave: sleep the
+                    # longest backoff for real; simulated lanes only
+                    # charged it to the clock above
+                    time.sleep(max(backoffs))
+                pending = nxt
+            if fault_before is not None:
+                after = fault_fn()
+                for key, attr in (
+                    ("n_respawns", "n_respawns"),
+                    ("n_spare_adoptions", "n_spare_adoptions"),
+                    ("n_degraded_lanes", "n_degraded_lanes"),
+                ):
+                    setattr(
+                        self.stats, attr,
+                        getattr(self.stats, attr)
+                        + after.get(key, 0) - fault_before.get(key, 0),
                     )
         done = [o for o in outcomes if o is not None]
         self.stats.n_dispatched += len(miss_idx)

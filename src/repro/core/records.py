@@ -28,6 +28,7 @@ import threading
 import time
 from typing import Iterable, Optional, Sequence
 
+from .fault import PERMANENT_KINDS, TRANSIENT_KINDS
 from .space import State, state_from_lists
 
 __all__ = [
@@ -275,6 +276,9 @@ class TrialJournal:
         self._best: dict[str, tuple[float, list]] = {}
         self._ops: dict[str, str] = {}  # workload -> op (schema guard)
         self._static_seen: dict[str, set] = {}  # audit rows already journaled
+        # transient-failure provenance rows already journaled (kept OUT of
+        # the cost table — see record_failure)
+        self._transient_seen: dict[str, set] = {}
         self._fd: Optional[int] = None
         self._read_pos = 0  # how far reload() has consumed the file
         if path:
@@ -322,6 +326,21 @@ class TrialJournal:
                         # out of the cost table — a later analyze=off run
                         # must re-measure the state, not cache-hit inf
                         self._static_seen.setdefault(
+                            row["w"], set()
+                        ).add(row["k"])
+                        continue
+                    if (
+                        isinstance(row, dict)
+                        and (row.get("fail") or row.get("c") is None)
+                        # failure taxonomy: rows from before it load as
+                        # kind="build" (a failed build — permanent, and
+                        # exactly as cacheable as a runtime).  Transient
+                        # kinds (crash/timeout/spawn/corrupt) say nothing
+                        # about the schedule: provenance only, a later
+                        # run must re-measure, never cache-hit inf.
+                        and row.get("kind", "build") in TRANSIENT_KINDS
+                    ):
+                        self._transient_seen.setdefault(
                             row["w"], set()
                         ).add(row["k"])
                         continue
@@ -429,8 +448,32 @@ class TrialJournal:
                 self._best[workload] = (cost, state_lists)
         return True
 
+    def _append_row(self, row: dict) -> None:
+        """Append one JSONL row (caller holds the lock, ``self.path`` set).
+
+        One write() per row: O_APPEND makes concurrent appends from
+        sibling engines/processes atomic, never interleaved.  A short
+        write (disk full, NFS) would tear the row AND swallow the next
+        sibling's O_APPEND line, so finish or fail loudly rather than
+        continue with a corrupt tail."""
+        if self._fd is None:
+            d = os.path.dirname(os.path.abspath(self.path))
+            os.makedirs(d, exist_ok=True)
+            self._fd = os.open(
+                self.path, os.O_WRONLY | os.O_APPEND | os.O_CREAT, 0o644
+            )
+        line = json.dumps(row, allow_nan=False, separators=(",", ":"))
+        view = memoryview((line + "\n").encode("utf-8"))
+        while view:
+            view = view[os.write(self._fd, view):]
+
     def record(self, workload: str, state: State, cost: float,
-               op: Optional[str] = None) -> None:
+               op: Optional[str] = None, kind: Optional[str] = None,
+               attempts: Optional[int] = None) -> None:
+        """Journal one measurement.  ``inf`` costs are failure rows; they
+        carry a failure ``kind`` (default ``"build"`` — the historical
+        backend-says-infeasible case) and optionally the number of
+        measurement ``attempts`` that led to the verdict."""
         if op is None:
             op = op_of_workload_key(workload)
         with self._lock:
@@ -438,12 +481,6 @@ class TrialJournal:
             if not self._ingest(workload, state.key(), lists, cost, op=op):
                 return
             if self.path:
-                if self._fd is None:
-                    d = os.path.dirname(os.path.abspath(self.path))
-                    os.makedirs(d, exist_ok=True)
-                    self._fd = os.open(
-                        self.path, os.O_WRONLY | os.O_APPEND | os.O_CREAT, 0o644
-                    )
                 row: dict = {"w": workload, "k": state.key(), "s": lists,
                              "op": op}
                 if math.isfinite(cost):
@@ -451,15 +488,41 @@ class TrialJournal:
                 else:
                     row["c"] = None
                     row["fail"] = True
-                # one write() per row: O_APPEND makes concurrent appends
-                # from sibling engines/processes atomic, never interleaved.
-                # A short write (disk full, NFS) would tear the row AND
-                # swallow the next sibling's O_APPEND line, so finish or
-                # fail loudly rather than continue with a corrupt tail.
-                line = json.dumps(row, allow_nan=False, separators=(",", ":"))
-                view = memoryview((line + "\n").encode("utf-8"))
-                while view:
-                    view = view[os.write(self._fd, view):]
+                    row["kind"] = kind or "build"
+                    if attempts is not None and attempts > 1:
+                        row["attempts"] = int(attempts)
+                self._append_row(row)
+
+    def record_failure(self, workload: str, state: State, kind: str,
+                       attempts: int = 1, op: Optional[str] = None) -> None:
+        """Journal a lane failure with taxonomy provenance.
+
+        *Permanent* kinds (a deterministic raise) are cacheable facts
+        about the schedule: they enter the cost table as ``inf`` exactly
+        like a failed build.  *Transient* kinds (crash/timeout/spawn/
+        corrupt — written after retry exhaustion) are provenance-only
+        audit rows: the journal documents what happened and how many
+        attempts were spent, but the state stays out of the cost table so
+        no later session ever cache-hits a worker death as "this config
+        is infeasible"."""
+        if kind in PERMANENT_KINDS:
+            self.record(workload, state, math.inf, op=op, kind=kind,
+                        attempts=attempts)
+            return
+        if op is None:
+            op = op_of_workload_key(workload)
+        with self._lock:
+            seen = self._transient_seen.setdefault(workload, set())
+            key = state.key()
+            if key in seen:
+                return
+            seen.add(key)
+            if not self.path:
+                return
+            row = {"w": workload, "k": key, "s": state.as_lists(), "op": op,
+                   "c": None, "fail": True, "kind": str(kind),
+                   "attempts": int(attempts)}
+            self._append_row(row)
 
     def record_static(self, workload: str, state: State, reason: str,
                       op: Optional[str] = None) -> None:
@@ -480,18 +543,9 @@ class TrialJournal:
             seen.add(key)
             if not self.path:
                 return
-            if self._fd is None:
-                d = os.path.dirname(os.path.abspath(self.path))
-                os.makedirs(d, exist_ok=True)
-                self._fd = os.open(
-                    self.path, os.O_WRONLY | os.O_APPEND | os.O_CREAT, 0o644
-                )
             row = {"w": workload, "k": key, "s": state.as_lists(),
                    "op": op, "c": None, "static": str(reason)}
-            line = json.dumps(row, allow_nan=False, separators=(",", ":"))
-            view = memoryview((line + "\n").encode("utf-8"))
-            while view:
-                view = view[os.write(self._fd, view):]
+            self._append_row(row)
 
     def close(self) -> None:
         """Release the append descriptor; the in-memory view (and

@@ -38,6 +38,7 @@ from typing import Callable, Optional, Sequence
 
 from .cost import CostBackend
 from .executor import LaneExecutor, make_executor
+from .fault import RetryPolicy
 from .measure import MeasureEngine, MeasureStats
 from .records import (
     TrialJournal,
@@ -46,8 +47,10 @@ from .records import (
     parse_workload_key_generic,
     workload_key_for,
 )
+from .snapshot import TuneCheckpointer, TuneInterrupted
 from .space import SearchSpace, State
-from .tuners import TUNERS, Budget, TuneResult
+from .tuners import TUNERS, Budget, Trial, TuneResult
+from .tuners.base import decode_cost, encode_cost
 
 __all__ = ["Workload", "GemmWorkload", "TuningSession", "ArchTuneReport"]
 
@@ -154,6 +157,52 @@ class ArchTuneReport:
         return out
 
 
+#: Snapshot step reserved for the "workload finished" marker — larger
+#: than any round index, so it always survives the checkpointer's GC and
+#: ``latest_step`` finds it first on resume.
+_DONE_STEP = 99_999_999
+
+
+def _result_to_jsonable(result: TuneResult) -> dict:
+    return {
+        "tuner": result.tuner,
+        "best": None if result.best_state is None else result.best_state.as_lists(),
+        "best_cost": encode_cost(result.best_cost),
+        "trials": [
+            [t.state.as_lists(), encode_cost(t.cost), t.clock_s]
+            for t in result.trials
+        ],
+        "fraction": result.fraction,
+        "wall_s": result.wall_s,
+        "clock_s": result.clock_s,
+        "n_workers": result.n_workers,
+        "n_cache_hits": result.n_cache_hits,
+        "executor": result.executor,
+    }
+
+
+def _result_from_jsonable(data: dict, space: SearchSpace) -> TuneResult:
+    trials = [
+        Trial(space.state_from_lists(lists), decode_cost(c), i, float(tc))
+        for i, (lists, c, tc) in enumerate(data["trials"])
+    ]
+    return TuneResult(
+        tuner=data["tuner"],
+        best_state=(
+            None if data["best"] is None else space.state_from_lists(data["best"])
+        ),
+        best_cost=decode_cost(data["best_cost"]),
+        trials=trials,
+        n_trials=len(trials),
+        fraction=data["fraction"],
+        wall_s=data["wall_s"],
+        clock_s=data["clock_s"],
+        n_workers=data["n_workers"],
+        n_cache_hits=data["n_cache_hits"],
+        executor=data["executor"],
+    )
+
+
 def _default_cost_factory(space: SearchSpace) -> CostBackend:
     """The op's analytical oracle, resolved through the registry."""
     from .ops import get_op
@@ -254,6 +303,9 @@ class TuningSession:
         executor: Optional[LaneExecutor] = None,
         reload_every: int = 0,
         analyze: str = "off",
+        retry: Optional[RetryPolicy] = None,
+        checkpointer: Optional[TuneCheckpointer] = None,
+        resume: bool = False,
     ) -> TuneResult:
         space = wl.space()
         cost = self.cost_factory(space)
@@ -268,6 +320,29 @@ class TuningSession:
             raise ValueError(
                 "analyze=... conflicts with the provided engine's analyze mode"
             )
+        if engine is not None and retry is not None and retry.enabled and engine.retry != retry:
+            raise ValueError(
+                "retry=... conflicts with the provided engine's retry policy"
+            )
+        # -- crash-safe resume: serve finished workloads from their done
+        # snapshot, restore interrupted ones mid-search -----------------------
+        restore = None
+        if checkpointer is not None and resume:
+            payload = checkpointer.load(wkey, tuner_name)
+            if payload is not None and payload.get("done"):
+                result = _result_from_jsonable(payload["result"], space)
+                if self.verbose:
+                    print(
+                        f"[tune] {wl.label or wkey} {tuner_name}: "
+                        f"already complete (resumed from done snapshot, "
+                        f"best={result.best_cost:.3e}s trials={result.n_trials})"
+                    )
+                return result
+            restore = payload
+        elif checkpointer is not None:
+            # fresh run: stale snapshots (incl. a previous done marker)
+            # must not shadow this run for a later --resume
+            checkpointer.clear(wkey, tuner_name)
         if engine is None:
             engine = MeasureEngine(
                 cost,
@@ -278,6 +353,7 @@ class TuningSession:
                 executor=executor,
                 reload_every=reload_every,
                 analyze=analyze,
+                retry=retry,
             )
         budget = budget or Budget(max_fraction=0.001)
         tuner_cls = TUNERS[tuner_name]
@@ -292,7 +368,28 @@ class TuningSession:
                 kwargs["s0"] = s0
         tuner = tuner_cls(space, cost, seed=self.seed if seed is None else seed,
                           **kwargs)
-        result = tuner.tune(budget, engine=engine)
+        checkpoint_fn = None
+        if checkpointer is not None:
+            def checkpoint_fn(t, ctx, _ck=checkpointer):
+                # periodic snapshot at the cadence; an interrupt always
+                # flushes a final one, then unwinds the whole session
+                if _ck.interrupted or ctx.round_idx % _ck.every_rounds == 0:
+                    _ck.save(
+                        wkey,
+                        tuner_name,
+                        {
+                            "tuner": tuner_name,
+                            "tuner_state": t.state_dict(),
+                            "ctx": ctx.snapshot(),
+                        },
+                        step=ctx.round_idx,
+                    )
+                if _ck.interrupted:
+                    raise TuneInterrupted(wkey)
+
+        result = tuner.tune(
+            budget, engine=engine, checkpoint_fn=checkpoint_fn, restore=restore
+        )
         if result.best_state is not None and math.isfinite(result.best_cost):
             self.records.update(
                 wkey,
@@ -301,6 +398,16 @@ class TuningSession:
                 tuner_name,
                 result.n_trials,
                 extra={"label": wl.label, "n_workers": engine.n_workers},
+            )
+        if checkpointer is not None:
+            # mark the workload finished AFTER records.update so a crash
+            # between the two re-runs the search instead of losing the record
+            checkpointer.save(
+                wkey,
+                tuner_name,
+                {"done": True, "tuner": tuner_name,
+                 "result": _result_to_jsonable(result)},
+                step=_DONE_STEP,
             )
         if self.verbose:
             print(
@@ -326,6 +433,9 @@ class TuningSession:
         executor: Optional[LaneExecutor | str] = None,
         reload_every: int = 0,
         analyze: str = "off",
+        retry: Optional[RetryPolicy] = None,
+        checkpointer: Optional[TuneCheckpointer] = None,
+        resume: bool = False,
     ) -> ArchTuneReport:
         """Tune every distinct workload an architecture executes through
         one shared engine configuration and one shared budget pool.
@@ -396,6 +506,9 @@ class TuningSession:
                     executor=exec_obj,
                     reload_every=reload_every,
                     analyze=analyze,
+                    retry=retry,
+                    checkpointer=checkpointer,
+                    resume=resume,
                 )
                 if left_trials is not None:
                     left_trials -= res.n_trials

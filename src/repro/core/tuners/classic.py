@@ -13,15 +13,24 @@ children as one batch, and annealing runs ``n_workers`` independent
 Metropolis chains whose per-round proposals are measured together.  With
 ``n_workers=1`` each of them degenerates to the historical serial loop
 (identical RNG consumption, identical trial order).
+
+Crash-safe resume: random and grid carry no search memory beyond the RNG
+stream / enumeration cursor, so their ``state_dict`` is (nearly) the base
+one; the GA externalizes its population.  Annealing's chains are live
+generators and resume *coarsely*: the RNG and visited set are restored
+but chains restart from fresh seeds — documented exception, its resumed
+trajectory is deterministic but not bit-identical to an uninterrupted
+run.
 """
 
 from __future__ import annotations
 
 import itertools
 import math
+from typing import Optional
 
 from ..space import State
-from .base import Tuner, TuningContext
+from .base import Tuner, TuningContext, decode_cost, encode_cost
 
 __all__ = ["RandomTuner", "GridTuner", "AnnealingTuner", "GeneticTuner"]
 
@@ -31,6 +40,7 @@ class RandomTuner(Tuner):
 
     def run(self, ctx: TuningContext) -> None:
         while not ctx.done():
+            ctx.checkpoint(self)
             wave: list[State] = []
             keys: set[str] = set()
             attempts = 0
@@ -48,16 +58,33 @@ class RandomTuner(Tuner):
 
 class GridTuner(Tuner):
     """Sequential sweep in enumeration order (paper Sec. 2: grid search),
-    chunked into lane-sized waves."""
+    chunked into lane-sized waves.  The enumeration cursor (`_drawn`) is
+    instance state so a restored tuner re-enters the sweep exactly where
+    the snapshot left it."""
 
     name = "grid"
 
+    def __init__(self, space, cost, seed: int = 0):
+        super().__init__(space, cost, seed)
+        self._drawn = 0
+
+    def state_dict(self) -> dict:
+        d = super().state_dict()
+        d["drawn"] = self._drawn
+        return d
+
+    def load_state_dict(self, state: dict) -> None:
+        super().load_state_dict(state)
+        self._drawn = state["drawn"]
+
     def run(self, ctx: TuningContext) -> None:
-        it = self.space.enumerate()
+        it = itertools.islice(self.space.enumerate(), self._drawn, None)
         while not ctx.done():
+            ctx.checkpoint(self)
             chunk = list(itertools.islice(it, max(1, ctx.n_workers)))
             if not chunk:
                 return
+            self._drawn += len(chunk)
             ctx.measure_many(chunk)
 
 
@@ -112,6 +139,7 @@ class AnnealingTuner(Tuner):
             except StopIteration:
                 pass
         while requests:
+            ctx.checkpoint(self)
             batch = [s for _, s in requests]
             costs = ctx.measure_many(batch)  # raises BudgetExhausted at the limit
             cost_of = {s.key(): c for s, c in zip(batch, costs)}
@@ -126,7 +154,9 @@ class AnnealingTuner(Tuner):
 
 class GeneticTuner(Tuner):
     """GA over exponent vectors; mutation = one MDP move, crossover =
-    per-dimension-row factor-list swap (keeps products exact)."""
+    per-dimension-row factor-list swap (keeps products exact).  The
+    population is instance state so a snapshot restores the exact gene
+    pool the interrupted generation was breeding from."""
 
     name = "genetic"
 
@@ -134,6 +164,29 @@ class GeneticTuner(Tuner):
                  elite: int = 8, mut_p: float = 0.6):
         super().__init__(space, cost, seed)
         self.pop_size, self.elite, self.mut_p = pop, elite, mut_p
+        self._pop: Optional[list[tuple[float, State]]] = None
+
+    # -- crash-safe resume ---------------------------------------------------
+    def state_dict(self) -> dict:
+        d = super().state_dict()
+        d["pop"] = (
+            None
+            if self._pop is None
+            else [[encode_cost(c), s.as_lists()] for c, s in self._pop]
+        )
+        return d
+
+    def load_state_dict(self, state: dict) -> None:
+        super().load_state_dict(state)
+        pop = state["pop"]
+        self._pop = (
+            None
+            if pop is None
+            else [
+                (decode_cost(c), self.space.state_from_lists(rows))
+                for c, rows in pop
+            ]
+        )
 
     def _crossover(self, a: State, b: State) -> State:
         rows_a, rows_b = a.as_lists(), b.as_lists()
@@ -162,11 +215,14 @@ class GeneticTuner(Tuner):
         return list(zip(costs, fresh))
 
     def run(self, ctx: TuningContext) -> None:
-        seeds = [self.space.initial_state()] + [
-            self.space.random_state(self.rng) for _ in range(self.pop_size - 1)
-        ]
-        pop = self._measure_fresh(ctx, seeds)
+        if self._pop is None:
+            seeds = [self.space.initial_state()] + [
+                self.space.random_state(self.rng) for _ in range(self.pop_size - 1)
+            ]
+            self._pop = self._measure_fresh(ctx, seeds)
         while not ctx.done():
+            ctx.checkpoint(self)
+            pop = self._pop
             pop.sort(key=lambda t: t[0])
             elites = pop[: self.elite]
             children: list[State] = []
@@ -189,4 +245,4 @@ class GeneticTuner(Tuner):
                     if not ctx.seen(s):
                         nxt.append((ctx.measure(s), s))
                         break
-            pop = nxt
+            self._pop = nxt

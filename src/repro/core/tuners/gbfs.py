@@ -9,16 +9,20 @@ wave, so each round costs one critical-path measurement on the search
 clock instead of ρ sequential ones.  With ``rho = len(g(s))`` and
 unlimited budget the search visits the entire reachable space (paper
 Sec. 4.2).
+
+The frontier and its tie-break counter live on the instance (not run's
+stack) so a crash-safe snapshot (``state_dict``) can capture them; a
+restored tuner resumes popping the exact frontier the interrupted run
+would have popped next.
 """
 
 from __future__ import annotations
 
 import heapq
-import itertools
 from typing import Optional
 
 from ..space import State
-from .base import Tuner, TuningContext
+from .base import Tuner, TuningContext, decode_cost, encode_cost
 
 __all__ = ["GBFSTuner"]
 
@@ -31,14 +35,47 @@ class GBFSTuner(Tuner):
         super().__init__(space, cost, seed)
         self.rho = rho
         self.s0 = s0
+        self._pq: Optional[list[tuple[float, int, State]]] = None
+        self._tie = 0  # stable heap order for equal costs
+
+    def _next_tie(self) -> int:
+        t = self._tie
+        self._tie += 1
+        return t
+
+    # -- crash-safe resume ---------------------------------------------------
+    def state_dict(self) -> dict:
+        d = super().state_dict()
+        d["tie"] = self._tie
+        d["pq"] = (
+            None
+            if self._pq is None
+            else [[encode_cost(c), t, s.as_lists()] for c, t, s in self._pq]
+        )
+        return d
+
+    def load_state_dict(self, state: dict) -> None:
+        super().load_state_dict(state)
+        self._tie = state["tie"]
+        pq = state["pq"]
+        # a heap serialized in list order deserializes as a valid heap
+        self._pq = (
+            None
+            if pq is None
+            else [
+                (decode_cost(c), t, self.space.state_from_lists(rows))
+                for c, t, rows in pq
+            ]
+        )
 
     def run(self, ctx: TuningContext) -> None:
-        s0 = self.s0 or self.space.initial_state()
-        c0 = ctx.measure(s0)
-        tie = itertools.count()  # stable heap order for equal costs
-        pq: list[tuple[float, int, State]] = [(c0, next(tie), s0)]
-        while pq and not ctx.done():
-            cost_s, _, s = heapq.heappop(pq)
+        if self._pq is None:
+            s0 = self.s0 or self.space.initial_state()
+            c0 = ctx.measure(s0)
+            self._pq = [(c0, self._next_tie(), s0)]
+        while self._pq and not ctx.done():
+            ctx.checkpoint(self)  # snapshot sees the un-popped frontier
+            cost_s, _, s = heapq.heappop(self._pq)
             neigh = [s2 for s2 in self.space.neighbors(s) if not ctx.seen(s2)]
             if not neigh:
                 continue
@@ -47,4 +84,4 @@ class GBFSTuner(Tuner):
             # one engine round per ρ-sample; raises BudgetExhausted at the limit
             costs = ctx.measure_many(batch)
             for s2, c2 in zip(batch, costs):
-                heapq.heappush(pq, (c2, next(tie), s2))
+                heapq.heappush(self._pq, (c2, self._next_tie(), s2))

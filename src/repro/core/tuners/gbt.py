@@ -142,6 +142,23 @@ class GBTTuner(Tuner):
         self.eps_random = eps_random
         self.n_trees, self.depth = n_trees, depth
         self.refit_every = refit_every
+        self._it = 0
+        self._needs_refit = False
+
+    # -- crash-safe resume ---------------------------------------------------
+    # The surrogate itself is not serialized: it is a pure function of
+    # ctx.trials, so a restored tuner refits from the restored trial log
+    # on its first round (bit-identical to an uninterrupted run when
+    # refit_every == 1, the default).
+    def state_dict(self) -> dict:
+        d = super().state_dict()
+        d["it"] = self._it
+        return d
+
+    def load_state_dict(self, state: dict) -> None:
+        super().load_state_dict(state)
+        self._it = state["it"]
+        self._needs_refit = True
 
     def _propose_pool(self, ctx: TuningContext) -> list[State]:
         pool: dict[str, State] = {}
@@ -175,8 +192,8 @@ class GBTTuner(Tuner):
                 break
             ctx.measure_many(wave)
         model = GradientBoostedTrees(self.n_trees, self.depth)
-        it = 0
         while not ctx.done():
+            ctx.checkpoint(self)
             # 2. fit surrogate on log-costs
             xs, ys = [], []
             for t in ctx.trials:
@@ -184,9 +201,10 @@ class GBTTuner(Tuner):
                 ys.append(
                     math.log(t.cost) if math.isfinite(t.cost) else math.log(1e3)
                 )
-            if it % self.refit_every == 0:
+            if self._needs_refit or self._it % self.refit_every == 0:
                 model.fit(np.stack(xs), np.asarray(ys))
-            it += 1
+                self._needs_refit = False
+            self._it += 1
             # 3. rank pool
             pool = self._propose_pool(ctx)
             if not pool:

@@ -34,6 +34,7 @@ from typing import Optional
 
 import numpy as np
 
+from ..snapshot import tree_from_jsonable, tree_to_jsonable
 from ..space import State
 from .base import Tuner, TuningContext
 
@@ -74,6 +75,54 @@ class NA2CTuner(Tuner):
         self.t_decay = t_decay
         self.s0 = s0
         self._jax_ready = False
+        # search memory (externalized so snapshots can capture it)
+        self._center: Optional[State] = None
+        self._c_ref: Optional[float] = None
+        self._replay: Optional[collections.deque] = None
+        self._episode = 0
+        self._T = steps_per_episode
+
+    # -- crash-safe resume ---------------------------------------------------
+    def state_dict(self) -> dict:
+        d = super().state_dict()
+        d["center"] = None if self._center is None else self._center.as_lists()
+        d["c_ref"] = self._c_ref
+        d["episode"] = self._episode
+        d["T"] = self._T
+        d["replay"] = (
+            None
+            if self._replay is None
+            else [tree_to_jsonable(e) for e in self._replay]
+        )
+        if self._jax_ready:
+            d["params"] = tree_to_jsonable(self.params)
+            d["opt_state"] = tree_to_jsonable(self.opt_state)
+        return d
+
+    def load_state_dict(self, state: dict) -> None:
+        super().load_state_dict(state)
+        self._center = (
+            None
+            if state["center"] is None
+            else self.space.state_from_lists(state["center"])
+        )
+        self._c_ref = state["c_ref"]
+        self._episode = state["episode"]
+        self._T = state["T"]
+        self._replay = (
+            None
+            if state["replay"] is None
+            else collections.deque(
+                (tree_from_jsonable(e) for e in state["replay"]),
+                maxlen=self.replay_cap,
+            )
+        )
+        if "params" in state:
+            if not self._jax_ready:
+                self._setup()  # builds jitted fns + shapes, then overwrite
+            leaf = self._jnp.asarray
+            self.params = tree_from_jsonable(state["params"], leaf)
+            self.opt_state = tree_from_jsonable(state["opt_state"], leaf)
 
     # -- lazy jax setup (keeps import cheap for non-RL users) -----------------
     def _setup(self):
@@ -143,14 +192,17 @@ class NA2CTuner(Tuner):
         if not self._jax_ready:
             self._setup()
         np_ = np
-        center = self.s0 or self.space.initial_state()
-        c_ref = ctx.measure(center)
-        if not math.isfinite(c_ref):
-            c_ref = 1.0
-        replay: collections.deque = collections.deque(maxlen=self.replay_cap)
-        episode = 0
-        T = self.T
+        if self._replay is None:
+            self._center = self.s0 or self.space.initial_state()
+            c_ref = ctx.measure(self._center)
+            self._c_ref = c_ref if math.isfinite(c_ref) else 1.0
+            self._replay = collections.deque(maxlen=self.replay_cap)
+        c_ref = self._c_ref
+        replay = self._replay
         while not ctx.done():
+            ctx.checkpoint(self)
+            T = self._T
+            center = self._center
             frac = len(ctx.trials) / max(1, ctx.max_trials)
             eps = self.eps0 + (self.eps1 - self.eps0) * frac
             collected: list[State] = []
@@ -191,9 +243,9 @@ class NA2CTuner(Tuner):
                     s = s2
             if not collected:
                 # neighborhood exhausted: hop the center to a random state
-                center = self.space.random_state(self.rng)
-                if not ctx.seen(center):
-                    ctx.measure(center)
+                self._center = self.space.random_state(self.rng)
+                if not ctx.seen(self._center):
+                    ctx.measure(self._center)
                 continue
             # -- measure the batch on "hardware": one engine round ---------------
             ctx.measure_many(collected)  # may raise BudgetExhausted — fine (line 4)
@@ -215,7 +267,7 @@ class NA2CTuner(Tuner):
                 )
             # -- re-anchor the neighborhood center (Algorithm 2 line 22) --------
             if ctx.best_state is not None:
-                center = ctx.best_state
+                self._center = ctx.best_state
             # -- train actor + critic from replay -------------------------------
             if len(replay) >= 8:
                 for _ in range(self.train_iters):
@@ -230,6 +282,6 @@ class NA2CTuner(Tuner):
                     self.params, self.opt_state = self._train_step(
                         self.params, self.opt_state, feats, acts, rewards, feats2, mask, mask2
                     )
-            episode += 1
-            if self.t_decay and episode % 16 == 0 and T > 1:
-                T -= 1
+            self._episode += 1
+            if self.t_decay and self._episode % 16 == 0 and self._T > 1:
+                self._T -= 1

@@ -17,6 +17,7 @@ import math
 
 import numpy as np
 
+from ..snapshot import tree_from_jsonable, tree_to_jsonable
 from ..space import State
 from .base import Tuner, TuningContext
 
@@ -52,6 +53,29 @@ class RNNControllerTuner(Tuner):
         self.entropy_beta = entropy_beta
         self.baseline_decay = baseline_decay
         self._ready = False
+        self._baseline = None
+        self._c_ref = None
+
+    # -- crash-safe resume ---------------------------------------------------
+    def state_dict(self) -> dict:
+        d = super().state_dict()
+        d["baseline"] = self._baseline
+        d["c_ref"] = self._c_ref
+        if self._ready:
+            d["params"] = tree_to_jsonable(self.params)
+            d["opt_state"] = tree_to_jsonable(self.opt_state)
+        return d
+
+    def load_state_dict(self, state: dict) -> None:
+        super().load_state_dict(state)
+        self._baseline = state["baseline"]
+        self._c_ref = state["c_ref"]
+        if "params" in state:
+            if not self._ready:
+                self._setup()  # builds jitted fns + shapes, then overwrite
+            leaf = self._jnp.asarray
+            self.params = tree_from_jsonable(state["params"], leaf)
+            self.opt_state = tree_from_jsonable(state["opt_state"], leaf)
 
     def _setup(self):
         import jax
@@ -173,11 +197,12 @@ class RNNControllerTuner(Tuner):
         if not self._ready:
             self._setup()
         np_ = np
-        c_ref = ctx.measure(self.space.initial_state())
-        if not math.isfinite(c_ref):
-            c_ref = 1.0
-        baseline = None
+        if self._c_ref is None:
+            c_ref = ctx.measure(self.space.initial_state())
+            self._c_ref = c_ref if math.isfinite(c_ref) else 1.0
+        c_ref = self._c_ref
         while not ctx.done():
+            ctx.checkpoint(self)
             sampled = []  # (state, choices, masks) pending measurement
             round_keys: set[str] = set()
             guard = 0
@@ -198,12 +223,12 @@ class RNNControllerTuner(Tuner):
                 for (_, choices, masks), c in zip(sampled, costs)
             ]
             rewards = np_.asarray([b[2] for b in batch], np_.float32)
-            if baseline is None:
-                baseline = float(rewards.mean())
-            adv = rewards - baseline
-            baseline = self.baseline_decay * baseline + (1 - self.baseline_decay) * float(
-                rewards.mean()
-            )
+            if self._baseline is None:
+                self._baseline = float(rewards.mean())
+            adv = rewards - self._baseline
+            self._baseline = self.baseline_decay * self._baseline + (
+                1 - self.baseline_decay
+            ) * float(rewards.mean())
             choices_b = np_.stack([b[0] for b in batch])
             masks_b = np_.stack([b[1] for b in batch])
             self.params, self.opt_state = self._train_step(

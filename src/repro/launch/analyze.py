@@ -33,6 +33,7 @@ Usage::
 from __future__ import annotations
 
 import argparse
+import collections
 import glob
 import json
 import math
@@ -41,6 +42,7 @@ import sys
 from typing import Optional
 
 from repro.core.analysis import ScheduleAnalyzer, dtype_in_bytes
+from repro.core.fault import PERMANENT_KINDS, TRANSIENT_KINDS
 from repro.core.ops import get_op
 from repro.core.records import (
     TrialJournal,
@@ -57,6 +59,10 @@ class _Auditor:
         self.errors: list[str] = []
         self.warnings: list[str] = []
         self._analyzers: dict[tuple, Optional[ScheduleAnalyzer]] = {}
+        # failure provenance (the journal's fail-row taxonomy)
+        self.fail_kinds: collections.Counter = collections.Counter()
+        self.n_retried_rows = 0  # fail rows that record >1 attempt
+        self.n_permanent_legal = 0  # permanent failures on legal schedules
 
     def error(self, where: str, msg: str) -> None:
         self.errors.append(f"{where}: {msg}")
@@ -158,6 +164,21 @@ def audit_journal(path: str, auditor: _Auditor) -> tuple[int, int]:
         if "static" in row:
             n_static += 1  # the engine's pruned-candidate audit trail
             continue
+        # failure provenance: every fail row carries a taxonomy kind
+        # (legacy rows without one are the historical failed-build inf)
+        fail_kind = None
+        if row.get("fail") or row.get("c") is None:
+            fail_kind = row.get("kind", "build")
+            auditor.fail_kinds[fail_kind] += 1
+            if int(row.get("attempts", 1)) > 1:
+                auditor.n_retried_rows += 1
+            if fail_kind in TRANSIENT_KINDS:
+                # provenance-only rows: the lane died, not the schedule —
+                # nothing about the state to audit
+                continue
+            if fail_kind not in PERMANENT_KINDS:
+                auditor.warn(where, f"unknown failure kind {fail_kind!r}")
+                continue
         try:
             lists = row["s"]
             st = state_from_lists(op, lists)
@@ -176,6 +197,18 @@ def audit_journal(path: str, auditor: _Auditor) -> tuple[int, int]:
                 where,
                 f"finite measured cost for an ILLEGAL schedule "
                 f"({res.reason}): {res.detail}",
+            )
+        if fail_kind in PERMANENT_KINDS and not res.illegal:
+            # a cacheable failure for a schedule the analyzer finds legal:
+            # either the backend is flakier than the taxonomy thinks (a
+            # transient miscast as permanent — it will never be retried)
+            # or the static model disagrees with the backend about
+            # feasibility; both deserve eyes
+            auditor.n_permanent_legal += 1
+            auditor.warn(
+                where,
+                f"permanent-failure row ({fail_kind}) cached for a schedule "
+                f"the analyzer finds legal",
             )
     return n, n_static
 
@@ -227,6 +260,15 @@ def main(argv=None) -> int:
         f"{n_rows} journal rows ({n_static} static audit rows) in "
         f"{len(journals)} file(s): {len(auditor.errors)} error(s), "
         f"{len(auditor.warnings)} warning(s)"
+    )
+    # machine-greppable failure-provenance summary (CI asserts on it)
+    kinds = " ".join(
+        f"{k}={auditor.fail_kinds[k]}" for k in sorted(auditor.fail_kinds)
+    )
+    print(
+        f"[analyze] failure-provenance: {kinds or 'none'} "
+        f"retried_rows={auditor.n_retried_rows} "
+        f"permanent_for_legal={auditor.n_permanent_legal}"
     )
     if auditor.errors or (args.strict and auditor.warnings):
         return 1

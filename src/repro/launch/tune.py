@@ -48,6 +48,7 @@ from __future__ import annotations
 
 import argparse
 import contextlib
+import sys
 from typing import Optional
 
 from repro.configs.registry import get_arch, get_shape
@@ -61,8 +62,11 @@ from repro.core import (
     op_names,
 )
 from repro.core.cost import XLATimedCost
+from repro.core.cost.base import SleepingCost
 from repro.core.executor import EXECUTORS
+from repro.core.fault import RetryPolicy
 from repro.core.records import compile_cache_dir_for
+from repro.core.snapshot import TuneCheckpointer, TuneInterrupted
 
 
 def _pad_dim(x: int) -> int:
@@ -166,6 +170,30 @@ def main() -> None:
                          "'warn' classifies candidates and counts advisory "
                          "flags, 'prune' rejects provably-bad ones before "
                          "they occupy a measurement lane")
+    ap.add_argument("--retries", type=int, default=1,
+                    help="max measurement attempts per candidate: transient "
+                         "lane failures (crash/timeout/spawn/corrupt) are "
+                         "re-queued into later waves with exponential "
+                         "backoff instead of surfacing inf to the tuner "
+                         "(1 = no retry)")
+    ap.add_argument("--retry-backoff", type=float, default=0.25,
+                    help="base backoff seconds between retry attempts "
+                         "(doubled per attempt, deterministic jitter)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="crash-safe session snapshot directory (default: "
+                         "<records>.tunestate; 'none' disables snapshots)")
+    ap.add_argument("--checkpoint-every", type=int, default=1,
+                    help="snapshot the search every N tuner rounds")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore each workload's search from its latest "
+                         "snapshot (finished workloads are served from "
+                         "their done marker); measurements replay from "
+                         "the journal, so the resumed search reaches the "
+                         "same best state as an uninterrupted run")
+    ap.add_argument("--measure-delay", type=float, default=0.0,
+                    help="seconds of real lane occupancy added per "
+                         "measurement (SleepingCost wrapper) — gives "
+                         "interrupt/kill tests a window to land in")
     args = ap.parse_args()
 
     if args.op not in op_names():
@@ -217,6 +245,34 @@ def main() -> None:
                 space, n_repeats=3, noise_sigma=args.noise, seed=args.seed
             )
 
+    if args.measure_delay > 0:
+        inner_factory = cost_factory
+
+        def cost_factory(space, _inner=inner_factory):
+            # real lane occupancy per measurement: the kill window that
+            # interrupt/resume smoke tests land a SIGTERM inside
+            return SleepingCost(_inner(space), delay_s=args.measure_delay)
+
+    retry = (
+        RetryPolicy(
+            max_attempts=args.retries,
+            backoff_s=args.retry_backoff,
+            seed=args.seed,
+        )
+        if args.retries > 1
+        else None
+    )
+    checkpoint_dir = args.checkpoint_dir
+    if checkpoint_dir is None:
+        checkpoint_dir = args.records + ".tunestate"
+    checkpointer = (
+        None
+        if checkpoint_dir == "none"
+        else TuneCheckpointer(checkpoint_dir, every_rounds=args.checkpoint_every)
+    )
+    if checkpointer is not None:
+        checkpointer.install_signal_handlers()
+
     records = TuningRecords(args.records)
     session = TuningSession(
         records,
@@ -225,17 +281,27 @@ def main() -> None:
         journal=journal,
     )
     budget = Budget(max_fraction=args.fraction, max_trials=args.max_trials)
-    with journal if journal is not None else contextlib.nullcontext():
-        report = session.tune_arch(
-            workloads=workloads,
-            tuner_name=args.tuner,
-            budget=budget,
-            n_workers=args.workers,
-            warm_start=args.warm_start,
-            executor=args.executor,
-            reload_every=args.reload_every,
-            analyze=args.analyze,
+    try:
+        with journal if journal is not None else contextlib.nullcontext():
+            report = session.tune_arch(
+                workloads=workloads,
+                tuner_name=args.tuner,
+                budget=budget,
+                n_workers=args.workers,
+                warm_start=args.warm_start,
+                executor=args.executor,
+                reload_every=args.reload_every,
+                analyze=args.analyze,
+                retry=retry,
+                checkpointer=checkpointer,
+                resume=args.resume,
+            )
+    except TuneInterrupted as e:
+        print(
+            f"[tune] interrupted at a round boundary ({e}); snapshot flushed "
+            f"to {checkpoint_dir} — rerun with --resume to continue"
         )
+        sys.exit(130)
     print(
         f"[tune] wrote {len(records)} records to {args.records} "
         f"(op={args.op} workers={report.n_workers} executor={args.executor} "

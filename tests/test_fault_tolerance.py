@@ -1,0 +1,482 @@
+"""Fault-tolerant search: failure taxonomy, retry/backoff lanes, the
+deterministic fault-injection harness, worker respawn budgets, and the
+journal's failure-provenance rows."""
+
+import json
+import math
+import time
+
+import pytest
+
+from repro.core import (
+    PERMANENT_KINDS,
+    TRANSIENT_KINDS,
+    AnalyticalTPUCost,
+    Budget,
+    FaultInjectionCost,
+    FaultPlan,
+    GBFSTuner,
+    GemmConfigSpace,
+    MeasureEngine,
+    ProcessExecutor,
+    RetryPolicy,
+    SimulatedExecutor,
+    SleepingCost,
+    ThreadExecutor,
+    TrialJournal,
+    classify_error,
+    workload_key,
+)
+
+
+@pytest.fixture(scope="module")
+def space():
+    return GemmConfigSpace(256, 256, 256)
+
+
+@pytest.fixture(scope="module")
+def states(space):
+    return [space.initial_state()] + space.neighbors(space.initial_state())[:5]
+
+
+def _wkey(space):
+    return workload_key(space.m, space.k, space.n, "bfloat16",
+                        "analytical_tpu_v5e")
+
+
+# -- taxonomy ------------------------------------------------------------------
+
+
+def test_taxonomy_is_a_partition():
+    assert not (TRANSIENT_KINDS & PERMANENT_KINDS)
+
+
+def test_classify_legacy_error_strings():
+    assert classify_error(None) is None
+    assert classify_error("lane timeout after 2.0s") == "timeout"
+    assert classify_error("worker died before dispatch") == "spawn"
+    assert classify_error("worker crashed (exit 13)") == "crash"
+    assert classify_error("ValueError: bad tile") == "raise"
+
+
+def test_retry_policy_deterministic_backoff():
+    p = RetryPolicy(max_attempts=3, backoff_s=0.1, jitter=0.5, seed=7)
+    q = RetryPolicy(max_attempts=3, backoff_s=0.1, jitter=0.5, seed=7)
+    for attempt in (1, 2, 3):
+        d = p.delay_s("some-state", attempt)
+        assert d == q.delay_s("some-state", attempt)  # pure function
+        assert 0.1 * 2 ** (attempt - 1) <= d <= 0.1 * 2 ** (attempt - 1) * 1.5
+    # different states draw different jitter but the same base
+    assert p.delay_s("a", 1) != p.delay_s("b", 1)
+    assert not RetryPolicy(max_attempts=1).enabled
+    with pytest.raises(ValueError):
+        RetryPolicy(max_attempts=0)
+
+
+def test_fault_plan_is_seeded_and_stable(states):
+    plan = FaultPlan(seed=3, p_crash=0.2, p_raise=0.2)
+    fates = [plan.fault_for(s.key()) for s in states]
+    assert fates == [plan.fault_for(s.key()) for s in states]
+    # raising p_crash never reshuffles which states take the OTHER kinds
+    more = FaultPlan(seed=3, p_crash=0.5, p_raise=0.2)
+    for s in states:
+        if plan.fault_for(s.key()) == "raise":
+            assert more.fault_for(s.key()) in ("raise", "crash")
+    assert FaultPlan(seed=3).fault_for(states[0].key()) is None  # all p=0
+
+
+def test_fault_injection_fire_budget(space, states, tmp_path):
+    inner = AnalyticalTPUCost(space)
+    s = states[0]
+    plan = FaultPlan(seed=0, p_corrupt=1.0, fires=1)
+    cost = FaultInjectionCost(inner, plan, fault_dir=str(tmp_path / "f1"))
+    assert cost.cost(s) == -1.0  # first attempt: the planned fault
+    assert cost.cost(s) == inner.cost(s)  # budget spent: clean
+    always = FaultInjectionCost(
+        inner, FaultPlan(seed=0, p_corrupt=1.0, fires=-1),
+        fault_dir=str(tmp_path / "f2"),
+    )
+    assert always.cost(s) == -1.0
+    assert always.cost(s) == -1.0
+    never = FaultInjectionCost(
+        inner, FaultPlan(seed=0, p_corrupt=1.0, fires=0),
+        fault_dir=str(tmp_path / "f3"),
+    )
+    assert never.cost(s) == inner.cost(s)
+
+
+def test_fault_injection_permanent_raise_every_attempt(space, states, tmp_path):
+    plan = FaultPlan(seed=0, p_raise=1.0, fires=1)
+    cost = FaultInjectionCost(
+        AnalyticalTPUCost(space), plan, fault_dir=str(tmp_path)
+    )
+    for _ in range(3):  # permanent: fires-budget does not apply
+        with pytest.raises(RuntimeError, match="injected permanent"):
+            cost.cost(states[0])
+
+
+def test_fault_injection_spec_round_trip(space, tmp_path):
+    from repro.core.cost.base import backend_from_spec
+
+    cost = FaultInjectionCost(
+        AnalyticalTPUCost(space),
+        FaultPlan(seed=2, p_corrupt=1.0, fires=0),
+        fault_dir=str(tmp_path),
+        delay_s=0.0,
+    )
+    rebuilt = backend_from_spec(cost.worker_spec())
+    s = space.initial_state()
+    assert rebuilt.cost(s) == cost.cost(s)
+    assert rebuilt.plan == cost.plan
+    assert rebuilt.measure_fingerprint() == cost.measure_fingerprint()
+
+
+# -- engine retry loop (simulated lanes, corrupt = the in-process-safe
+# transient: crash would kill the test runner, hang would stall it) -----------
+
+
+def test_retry_recovers_every_transient(space, states, tmp_path):
+    inner = AnalyticalTPUCost(space)
+    faulty = FaultInjectionCost(
+        inner, FaultPlan(seed=1, p_corrupt=1.0, fires=1),
+        fault_dir=str(tmp_path / "faults"),
+    )
+    jpath = str(tmp_path / "j.jsonl")
+    eng = MeasureEngine(
+        faulty, n_workers=3, journal=TrialJournal(jpath),
+        workload_key=_wkey(space), retry=RetryPolicy(max_attempts=3, seed=1),
+    )
+    outs = []
+    for i in range(0, len(states), 3):
+        outs.extend(eng.measure_wave(states[i : i + 3]))
+    # zero inf surfaced to the tuner: every transient was retried to success
+    assert all(math.isfinite(o.cost) for o in outs)
+    assert {o.state.key(): o.cost for o in outs} == {
+        s.key(): inner.cost(s) for s in states
+    }  # same costs as a fault-free run
+    assert eng.stats.n_retries == len(states)
+    assert eng.stats.n_transient_recovered == len(states)
+    assert eng.stats.retry_backoff_s > 0
+    assert eng.stats.n_failed_transient == 0
+    recovered = [o for o in outs if o.attempts > 1]
+    assert len(recovered) == len(states)
+    # the backoff was charged to the lane occupancy (and so to the clock)
+    assert all(o.lane_s > eng.lane_time(o.cost) for o in recovered)
+    # journal: only clean costs, zero transient rows in the cost table
+    j2 = TrialJournal(jpath)
+    for s in states:
+        assert j2.get(f"{_wkey(space)}?{faulty.measure_fingerprint()}",
+                      s.key(), op="gemm") == pytest.approx(inner.cost(s))
+
+
+def test_retry_exhaustion_reports_failed_transient(space, states, tmp_path):
+    faulty = FaultInjectionCost(
+        AnalyticalTPUCost(space),
+        FaultPlan(seed=1, p_corrupt=1.0, fires=-1),  # every attempt faults
+        fault_dir=str(tmp_path / "faults"),
+    )
+    jpath = str(tmp_path / "j.jsonl")
+    jkey = f"{_wkey(space)}?{faulty.measure_fingerprint()}"
+    eng = MeasureEngine(
+        faulty, n_workers=2, journal=TrialJournal(jpath),
+        workload_key=_wkey(space), retry=RetryPolicy(max_attempts=2, seed=0),
+    )
+    outs = eng.measure_wave(states[:2])
+    assert all(math.isinf(o.cost) for o in outs)
+    # exhausted transients are REPORTED as such, distinct from infeasible
+    assert all(o.failed_transient for o in outs)
+    assert all(o.kind == "corrupt" for o in outs)
+    assert all(o.attempts == 2 for o in outs)
+    assert eng.stats.n_failed_transient == 2
+    assert eng.stats.n_failures == 2
+    # provenance rows exist on disk but must NEVER serve as cache hits
+    rows = [json.loads(l) for l in open(jpath)]
+    assert [r["kind"] for r in rows] == ["corrupt", "corrupt"]
+    assert all(r["c"] is None and r["fail"] for r in rows)
+    assert all(r["attempts"] == 2 for r in rows)
+    j2 = TrialJournal(jpath)
+    assert j2.get(jkey, states[0].key(), op="gemm") is None
+    eng2 = MeasureEngine(
+        faulty, n_workers=2, journal=j2, workload_key=_wkey(space),
+        retry=RetryPolicy(max_attempts=2, seed=0),
+    )
+    eng2.measure_wave(states[:2])
+    assert eng2.stats.n_cache_hits == 0  # re-dispatched, not served
+
+
+def test_corrupt_value_is_never_journaled_without_retry(space, states, tmp_path):
+    """Historical contract: without a RetryPolicy, executor-level failures
+    are counted but never journaled — and a corrupt (negative) cost must
+    not crash the strict-JSON journal or poison the cost table."""
+    faulty = FaultInjectionCost(
+        AnalyticalTPUCost(space),
+        FaultPlan(seed=1, p_corrupt=1.0, fires=-1),
+        fault_dir=str(tmp_path / "faults"),
+    )
+    jpath = str(tmp_path / "j.jsonl")
+    eng = MeasureEngine(
+        faulty, n_workers=1, journal=TrialJournal(jpath),
+        workload_key=_wkey(space),
+    )
+    (o,) = eng.measure_wave(states[:1])
+    assert math.isinf(o.cost) and o.kind == "corrupt"
+    assert o.attempts == 1 and o.failed_transient
+    assert eng.stats.n_failures == 1
+    import os
+
+    assert not os.path.exists(jpath) or open(jpath).read() == ""
+
+
+def test_permanent_raise_is_cached_not_retried(space, states, tmp_path):
+    """A deterministic raise is a property of the schedule: one attempt,
+    journaled as a cacheable inf row with kind='raise'."""
+    faulty = FaultInjectionCost(
+        AnalyticalTPUCost(space),
+        FaultPlan(seed=1, p_raise=1.0),
+        fault_dir=str(tmp_path / "faults"),
+    )
+    jpath = str(tmp_path / "j.jsonl")
+    jkey = f"{_wkey(space)}?{faulty.measure_fingerprint()}"
+    eng = MeasureEngine(
+        faulty, n_workers=1, journal=TrialJournal(jpath),
+        workload_key=_wkey(space), retry=RetryPolicy(max_attempts=3, seed=0),
+    )
+    (o,) = eng.measure_wave(states[:1])
+    assert math.isinf(o.cost)
+    assert o.kind == "raise" and o.attempts == 1 and not o.failed_transient
+    assert eng.stats.n_retries == 0
+    (row,) = [json.loads(l) for l in open(jpath)]
+    assert row["kind"] == "raise" and row["c"] is None
+    # permanent failures ARE cache hits for future sessions
+    j2 = TrialJournal(jpath)
+    assert math.isinf(j2.get(jkey, states[0].key(), op="gemm"))
+
+
+def test_legacy_fail_rows_load_as_build_kind(space, states, tmp_path):
+    """Pre-taxonomy fail rows (no 'kind' field) must keep serving as
+    cacheable failed builds."""
+    jpath = str(tmp_path / "j.jsonl")
+    jkey = _wkey(space)
+    with open(jpath, "w") as f:
+        f.write(json.dumps({
+            "w": jkey, "k": states[0].key(), "s": states[0].as_lists(),
+            "op": "gemm", "c": None, "fail": True,
+        }) + "\n")
+    j = TrialJournal(jpath)
+    assert math.isinf(j.get(jkey, states[0].key(), op="gemm"))
+
+
+def test_retried_run_matches_fault_free_journal(space, states, tmp_path):
+    """Same seed, faults on vs off: with retry enabled the surviving
+    journal cost tables are identical — fault recovery is invisible to
+    the search."""
+    inner = AnalyticalTPUCost(space)
+    wkey = _wkey(space)
+
+    def run(faulted: bool, tag: str) -> dict:
+        backend = (
+            FaultInjectionCost(
+                inner, FaultPlan(seed=5, p_corrupt=0.4, fires=1),
+                fault_dir=str(tmp_path / f"faults-{tag}"),
+            )
+            if faulted
+            else inner
+        )
+        jpath = str(tmp_path / f"j-{tag}.jsonl")
+        eng = MeasureEngine(
+            backend, n_workers=2, journal=TrialJournal(jpath),
+            workload_key=wkey, retry=RetryPolicy(max_attempts=3, seed=0),
+        )
+        tuner = GBFSTuner(space, backend, seed=4)
+        res = tuner.tune(Budget(max_trials=24), engine=eng)
+        rows = [json.loads(l) for l in open(jpath)]
+        return {
+            "best_key": res.best_state.key(),
+            "best_cost": res.best_cost,
+            "trial_keys": [t.state.key() for t in res.trials],
+            "costs": {r["k"]: r["c"] for r in rows if r.get("c") is not None},
+        }
+
+    clean = run(False, "clean")
+    faulted = run(True, "faulted")
+    assert faulted["best_key"] == clean["best_key"]
+    assert faulted["best_cost"] == clean["best_cost"]
+    assert faulted["trial_keys"] == clean["trial_keys"]
+    # fingerprints differ (faulty(...) wrapper name) but the measured
+    # cost tables are identical state-for-state
+    assert faulted["costs"] == clean["costs"]
+
+
+def test_retry_determinism_same_plan_same_journal(space, tmp_path):
+    """Satellite: two runs with the same seeded FaultPlan and seed produce
+    the same journal contents and the same best state."""
+    inner = AnalyticalTPUCost(space)
+    wkey = _wkey(space)
+
+    def run(tag: str):
+        backend = FaultInjectionCost(
+            inner, FaultPlan(seed=9, p_corrupt=0.3, fires=1),
+            fault_dir=str(tmp_path / f"faults-{tag}"),  # fresh fire counters
+        )
+        jpath = str(tmp_path / f"j-{tag}.jsonl")
+        eng = MeasureEngine(
+            backend, n_workers=3, journal=TrialJournal(jpath),
+            workload_key=wkey, retry=RetryPolicy(max_attempts=3, seed=2),
+        )
+        res = GBFSTuner(space, backend, seed=11).tune(
+            Budget(max_trials=20), engine=eng
+        )
+        rows = [json.loads(l) for l in open(jpath)]
+        return res, rows, eng.stats
+
+    r1, rows1, st1 = run("one")
+    r2, rows2, st2 = run("two")
+    assert r1.best_state.key() == r2.best_state.key()
+    assert r1.best_cost == r2.best_cost
+    assert r1.clock_s == r2.clock_s  # deterministic backoff charges
+    assert rows1 == rows2  # byte-identical journal contents
+    assert st1.n_retries == st2.n_retries
+
+
+# -- straggler detection -------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_straggler_detection(space, tmp_path):
+    plan = FaultPlan(seed=13, p_outlier=0.2, outlier_s=0.6, fires=1)
+    pool, outlier = [], None
+    for s in [space.initial_state()] + space.neighbors(space.initial_state()):
+        fate = plan.fault_for(s.key())
+        if fate == "outlier" and outlier is None:
+            outlier = s
+        elif fate is None and len(pool) < 2:
+            pool.append(s)
+    if outlier is None:
+        pytest.skip("no outlier state in the sampled neighborhood")
+    backend = FaultInjectionCost(
+        SleepingCost(AnalyticalTPUCost(space), delay_s=0.01), plan,
+        fault_dir=str(tmp_path), delay_s=0.0,
+    )
+    with ThreadExecutor(timeout_s=30.0) as ex:
+        eng = MeasureEngine(backend, n_workers=3, executor=ex)
+        outs = eng.measure_wave(pool + [outlier])
+    assert all(math.isfinite(o.cost) for o in outs)
+    assert eng.stats.n_stragglers >= 1
+
+
+# -- process lanes: crash recovery, respawn budget, degradation ---------------
+
+
+@pytest.mark.slow
+def test_process_retry_recovers_worker_crash(space, states, tmp_path):
+    """A seeded crash kills the worker process; the respawned lane's
+    retry measures the same state cleanly — zero inf surfaced."""
+    inner = AnalyticalTPUCost(space)
+    faulty = FaultInjectionCost(
+        inner, FaultPlan(seed=1, p_crash=1.0, fires=1),
+        fault_dir=str(tmp_path / "faults"),
+    )
+    with ProcessExecutor(timeout_s=30.0) as ex:
+        eng = MeasureEngine(
+            faulty, n_workers=2, executor=ex,
+            journal=TrialJournal(str(tmp_path / "j.jsonl")),
+            workload_key=_wkey(space),
+            retry=RetryPolicy(max_attempts=3, backoff_s=0.01, seed=0),
+        )
+        outs = eng.measure_wave(states[:2])
+        assert all(math.isfinite(o.cost) for o in outs)
+        assert {o.state.key(): o.cost for o in outs} == {
+            s.key(): inner.cost(s) for s in states[:2]
+        }
+        assert eng.stats.n_transient_recovered == 2
+        assert eng.stats.n_respawns >= 1
+
+
+@pytest.mark.slow
+def test_process_respawn_budget_degrades_to_thread(space, tmp_path):
+    """A lane whose worker keeps dying exhausts its respawn budget and
+    degrades to in-thread measurement for the rest of the run."""
+    crash_states = [space.initial_state()] + space.neighbors(
+        space.initial_state()
+    )[:1]
+    clean_state = space.neighbors(space.initial_state())[2]
+    backend = SleepingCost(
+        AnalyticalTPUCost(space), delay_s=0.0,
+        exit_keys=[s.key() for s in crash_states],
+    )
+    with ProcessExecutor(timeout_s=30.0, max_respawns=1,
+                         respawn_backoff_s=0.01) as ex:
+        eng = MeasureEngine(backend, n_workers=1, executor=ex)
+        for s in crash_states:  # two deaths on lane 0: budget (1) exhausted
+            (o,) = eng.measure_wave([s])
+            assert math.isinf(o.cost) and o.kind == "crash"
+        # degraded lane still measures — in-thread, same values
+        (o,) = eng.measure_wave([clean_state])
+        assert o.cost == AnalyticalTPUCost(space).cost(clean_state)
+        fs = ex.fault_stats()
+        assert fs["n_degraded_lanes"] == 1
+        assert fs["n_respawns"] >= 1
+        assert eng.stats.n_degraded_lanes == 1
+
+
+@pytest.mark.slow
+def test_process_hot_spare_adoption(space, tmp_path):
+    """``warm_up(n + spares, backend=...)`` parks pre-built spare
+    workers; a lane whose worker dies adopts one instead of paying a
+    cold interpreter start-up (and the adoption is counted)."""
+    crash_state = space.initial_state()
+    clean_state = space.neighbors(space.initial_state())[0]
+    backend = SleepingCost(
+        AnalyticalTPUCost(space), delay_s=0.0,
+        exit_keys=[crash_state.key()],
+    )
+    with ProcessExecutor(timeout_s=30.0) as ex:
+        ex.warm_up(2, backend=backend)  # one lane wide + one hot spare
+        eng = MeasureEngine(backend, n_workers=1, executor=ex)
+        (o,) = eng.measure_wave([crash_state])
+        assert math.isinf(o.cost) and o.kind == "crash"
+        t0 = time.perf_counter()
+        (o,) = eng.measure_wave([clean_state])
+        adoption_wall = time.perf_counter() - t0
+        assert o.cost == AnalyticalTPUCost(space).cost(clean_state)
+        fs = ex.fault_stats()
+        assert fs["n_spare_adoptions"] == 1
+        assert fs["n_respawns"] == 1  # the death is still charged
+        assert fs["n_degraded_lanes"] == 0
+        assert eng.stats.n_spare_adoptions == 1
+        # the adopted worker was prewarmed: no interpreter start-up or
+        # backend build inside the wave (a cold spawn takes seconds)
+        assert adoption_wall < 2.0
+
+
+@pytest.mark.slow
+def test_process_retry_determinism(space, states, tmp_path):
+    """Satellite: the same seeded FaultPlan over process lanes yields the
+    same journal cost table and best state across two runs."""
+    inner = AnalyticalTPUCost(space)
+    wkey = _wkey(space)
+
+    def run(tag: str):
+        backend = FaultInjectionCost(
+            inner, FaultPlan(seed=21, p_crash=0.3, fires=1),
+            fault_dir=str(tmp_path / f"faults-{tag}"),
+        )
+        jpath = str(tmp_path / f"j-{tag}.jsonl")
+        with ProcessExecutor(timeout_s=30.0) as ex:
+            eng = MeasureEngine(
+                backend, n_workers=2, executor=ex,
+                journal=TrialJournal(jpath), workload_key=wkey,
+                retry=RetryPolicy(max_attempts=3, backoff_s=0.01, seed=0),
+            )
+            outs = []
+            for i in range(0, len(states), 2):
+                outs.extend(eng.measure_wave(states[i : i + 2]))
+        rows = [json.loads(l) for l in open(jpath)]
+        costs = {r["k"]: r["c"] for r in rows if r.get("c") is not None}
+        return {o.state.key(): o.cost for o in outs}, costs
+
+    outs1, costs1 = run("one")
+    outs2, costs2 = run("two")
+    assert outs1 == outs2
+    assert costs1 == costs2
+    assert all(math.isfinite(c) for c in outs1.values())

@@ -1,0 +1,353 @@
+"""Crash-safe tune resume: the pytree<->JSON codec, the atomic snapshot
+store, per-tuner state_dict round trips, interrupt-and-resume equivalence
+(in-process and through the CLI with a real SIGTERM), and done-snapshot
+serving."""
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AnalyticalTPUCost,
+    Budget,
+    CountingCost,
+    GemmConfigSpace,
+    TrialJournal,
+    TuneCheckpointer,
+    TuneInterrupted,
+    TuningRecords,
+    TuningSession,
+    Workload,
+)
+from repro.core.snapshot import tree_from_jsonable, tree_to_jsonable
+from repro.core.tuners import (
+    GBFSTuner,
+    GBTTuner,
+    GeneticTuner,
+    GridTuner,
+    NA2CTuner,
+    RandomTuner,
+    RNNControllerTuner,
+)
+
+RESUMABLE_FAST = [GBFSTuner, RandomTuner, GridTuner, GeneticTuner, GBTTuner]
+# keep proposal batches small so a 24-trial budget spans several rounds
+# (the interrupt must land at a round boundary before exhaustion)
+TUNER_KW = {
+    GeneticTuner: {"pop": 8, "elite": 4},
+    GBTTuner: {"warmup": 6, "batch_size": 4},
+}
+
+
+@pytest.fixture(scope="module")
+def space():
+    return GemmConfigSpace(256, 256, 256)
+
+
+# -- pytree <-> JSON codec ----------------------------------------------------
+
+
+def test_tree_codec_round_trip_exact():
+    tree = {
+        "params": [
+            np.arange(6, dtype=np.float32).reshape(2, 3) / 7.0,
+            (np.int32(3), np.bool_(True)),
+        ],
+        "scalar": np.float32(0.1),
+        "empty": [],
+    }
+    data = json.loads(json.dumps(tree_to_jsonable(tree)))  # survives JSON
+    back = tree_from_jsonable(data)
+    assert isinstance(back["params"], list)
+    assert isinstance(back["params"][1], tuple)  # tuples stay tuples
+    np.testing.assert_array_equal(back["params"][0], tree["params"][0])
+    assert back["params"][0].dtype == np.float32
+    # float32 values survive the float repr round trip bit-identically
+    assert back["scalar"] == np.float32(0.1)
+    assert back["params"][1][0] == 3 and back["params"][1][1]
+
+
+def test_tree_codec_leaf_hook():
+    got = tree_from_jsonable(
+        tree_to_jsonable([np.float32(2.0)]), leaf=lambda a: a * 2
+    )
+    assert got == [np.float32(4.0)]
+
+
+# -- the snapshot store -------------------------------------------------------
+
+
+def test_checkpointer_save_load_gc_clear(tmp_path):
+    ck = TuneCheckpointer(str(tmp_path / "state"), keep_n=2)
+    assert ck.load("w", "g-bfs") is None
+    for step in (1, 2, 3):
+        ck.save("w", "g-bfs", {"round": step}, step=step)
+    assert ck.latest_step("w", "g-bfs") == 3
+    assert ck.load("w", "g-bfs") == {"round": 3}
+    wdir = ck._wdir("w", "g-bfs")
+    kept = sorted(n for n in os.listdir(wdir) if n.startswith("step_"))
+    assert len(kept) == 2  # GC keeps keep_n committed snapshots
+    # other (workload, tuner) identities are independent
+    ck.save("w", "random", {"round": 9}, step=9)
+    assert ck.load("w", "g-bfs") == {"round": 3}
+    ck.clear("w", "g-bfs")
+    assert ck.load("w", "g-bfs") is None
+    assert ck.load("w", "random") == {"round": 9}
+
+
+def test_checkpointer_uncommitted_snapshot_is_invisible(tmp_path):
+    ck = TuneCheckpointer(str(tmp_path / "state"))
+    final = ck.save("w", "g-bfs", {"round": 1}, step=1)
+    ck.save("w", "g-bfs", {"round": 2}, step=2)
+    os.remove(os.path.join(ck._wdir("w", "g-bfs"), "step_00000002", "COMMIT"))
+    assert ck.load("w", "g-bfs") == {"round": 1}  # torn publish ignored
+    assert os.path.exists(final)
+
+
+def test_interrupt_flag_is_cooperative(tmp_path):
+    ck = TuneCheckpointer(str(tmp_path / "state"))
+    assert not ck.interrupted
+    ck.request_interrupt()
+    assert ck.interrupted
+
+
+# -- tuner state_dict round trips --------------------------------------------
+
+
+@pytest.mark.parametrize("tuner_cls", RESUMABLE_FAST, ids=lambda c: c.name)
+def test_state_dict_json_round_trip(space, tuner_cls):
+    cost = AnalyticalTPUCost(space)
+    t = tuner_cls(space, cost, seed=3)
+    t.tune(Budget(max_trials=8))
+    payload = json.loads(json.dumps(t.state_dict()))
+    t2 = tuner_cls(space, cost, seed=3)
+    t2.load_state_dict(payload)
+    assert t2.rng.getstate() == t.rng.getstate()
+    assert t2.state_dict() == json.loads(json.dumps(payload))
+
+
+def test_state_dict_rejects_foreign_tuner(space):
+    cost = AnalyticalTPUCost(space)
+    snap = GBFSTuner(space, cost).state_dict()
+    with pytest.raises(ValueError, match="belongs to tuner"):
+        RandomTuner(space, cost).load_state_dict(snap)
+
+
+# -- interrupt-and-resume equivalence (in-process) ----------------------------
+
+
+def _reference(tuner_cls, space, cost, n_trials, **kw):
+    res = tuner_cls(space, cost, seed=7, **kw).tune(Budget(max_trials=n_trials))
+    return res
+
+
+def _interrupt_then_resume(tuner_cls, space, cost, n_trials, stop_round, **kw):
+    """Run until round ``stop_round``, snapshot there, resume a FRESH
+    tuner from the JSON-round-tripped snapshot."""
+    box = {}
+
+    def checkpoint_fn(t, ctx):
+        box["payload"] = {"tuner_state": t.state_dict(), "ctx": ctx.snapshot()}
+        if ctx.round_idx >= stop_round:
+            raise TuneInterrupted("test")
+
+    t1 = tuner_cls(space, cost, seed=7, **kw)
+    with pytest.raises(TuneInterrupted):
+        t1.tune(Budget(max_trials=n_trials), checkpoint_fn=checkpoint_fn)
+    payload = json.loads(json.dumps(box["payload"]))
+    t2 = tuner_cls(space, cost, seed=7, **kw)
+    return t2.tune(Budget(max_trials=n_trials), restore=payload)
+
+
+def _assert_equivalent(ref, res):
+    assert [t.state.key() for t in res.trials] == [
+        t.state.key() for t in ref.trials
+    ]
+    assert [t.cost for t in res.trials] == [t.cost for t in ref.trials]
+    assert res.best_state.key() == ref.best_state.key()
+    assert res.best_cost == ref.best_cost
+    assert res.clock_s == ref.clock_s
+
+
+@pytest.mark.parametrize("tuner_cls", RESUMABLE_FAST, ids=lambda c: c.name)
+def test_interrupted_resume_is_bit_identical(space, tuner_cls):
+    cost = AnalyticalTPUCost(space)
+    kw = TUNER_KW.get(tuner_cls, {})
+    ref = _reference(tuner_cls, space, cost, 24, **kw)
+    res = _interrupt_then_resume(tuner_cls, space, cost, 24, stop_round=2, **kw)
+    _assert_equivalent(ref, res)
+
+
+@pytest.mark.parametrize("stop_round", [1, 2, 3])
+def test_resume_equivalence_at_any_cut(space, stop_round):
+    cost = AnalyticalTPUCost(space)
+    ref = _reference(GBFSTuner, space, cost, 40)
+    res = _interrupt_then_resume(
+        GBFSTuner, space, cost, 40, stop_round=stop_round
+    )
+    _assert_equivalent(ref, res)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize(
+    "tuner_cls", [NA2CTuner, RNNControllerTuner], ids=lambda c: c.name
+)
+def test_learned_tuner_resume_is_bit_identical(space, tuner_cls):
+    """The learned tuners carry network weights + optimizer state through
+    the snapshot (tree codec) — resume must continue the same trajectory."""
+    cost = AnalyticalTPUCost(space)
+    kw = {"batch_size": 4}  # several rounds inside the trial budget
+    ref = _reference(tuner_cls, space, cost, 16, **kw)
+    res = _interrupt_then_resume(tuner_cls, space, cost, 16, stop_round=2, **kw)
+    _assert_equivalent(ref, res)
+
+
+# -- session-level: done snapshots, fresh-run clearing ------------------------
+
+
+def _session(tmp_path, cost):
+    return TuningSession(
+        TuningRecords(str(tmp_path / "records.json")),
+        cost_factory=lambda space: cost,
+        verbose=False,
+        journal=TrialJournal(str(tmp_path / "journal.jsonl")),
+    )
+
+
+def test_done_snapshot_serves_finished_workload(space, tmp_path):
+    wl = Workload("gemm", (256, 256, 256))
+    cost = CountingCost(AnalyticalTPUCost(space))
+    ck = TuneCheckpointer(str(tmp_path / "state"))
+    sess = _session(tmp_path, cost)
+    res = sess.tune_workload(wl, "g-bfs", Budget(max_trials=10),
+                             checkpointer=ck)
+    n_after_run = cost.n_measured
+    assert n_after_run > 0
+    # resume of a finished workload: served from the done marker — the
+    # backend is never touched again
+    res2 = sess.tune_workload(wl, "g-bfs", Budget(max_trials=10),
+                              checkpointer=ck, resume=True)
+    assert cost.n_measured == n_after_run
+    assert res2.best_state.key() == res.best_state.key()
+    assert res2.best_cost == res.best_cost
+    assert res2.n_trials == res.n_trials
+    assert [t.state.key() for t in res2.trials] == [
+        t.state.key() for t in res.trials
+    ]
+
+
+def test_fresh_run_clears_stale_done_marker(space, tmp_path):
+    wl = Workload("gemm", (256, 256, 256))
+    cost = CountingCost(AnalyticalTPUCost(space))
+    ck = TuneCheckpointer(str(tmp_path / "state"))
+    sess = _session(tmp_path, cost)
+    sess.tune_workload(wl, "g-bfs", Budget(max_trials=6), checkpointer=ck)
+    # a NON-resume run must re-tune and drop the old done marker...
+    n0 = cost.n_measured
+    sess.tune_workload(wl, "g-bfs", Budget(max_trials=6), checkpointer=ck)
+    assert cost.n_measured == n0  # (journal serves the repeats: no new calls)
+    wkey = wl.key(cost.name)
+    payload = ck.load(wkey, "g-bfs")
+    assert payload is not None and payload.get("done")  # the NEW marker
+
+
+# -- CLI kill-and-resume (the satellite: SIGTERM mid-search, --resume,
+# identical visited sequence and best) ---------------------------------------
+
+
+def _tune_cmd(tmp, extra):
+    return [
+        sys.executable, "-m", "repro.launch.tune",
+        "--op", "flash", "--fraction", "0.5", "--max-trials", "30",
+        "--workers", "1", "--seed", "3", "--measure-delay", "0.08",
+        "--records", str(tmp / "records.json"),
+        *extra,
+    ]
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in ["src", env.get("PYTHONPATH", "")] if p
+    )
+    return env
+
+
+def _journal_keys(path):
+    return [json.loads(l)["k"] for l in open(path)]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("tuner", ["g-bfs", "random", "genetic"])
+def test_cli_sigterm_resume_matches_uninterrupted(tuner, tmp_path):
+    env = _env()
+    # reference: uninterrupted run in its own directory
+    ref_dir = tmp_path / "ref"
+    ref_dir.mkdir()
+    r = subprocess.run(_tune_cmd(ref_dir, ["--tuner", tuner]),
+                       env=env, capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, r.stderr
+    ref_keys = _journal_keys(str(ref_dir / "records.json.journal.jsonl"))
+    ref_recs = json.load(open(ref_dir / "records.json"))
+
+    # interrupted run: SIGTERM lands mid-search (the --measure-delay
+    # window), the process flushes a snapshot and exits 130
+    run_dir = tmp_path / "run"
+    run_dir.mkdir()
+    p = subprocess.Popen(_tune_cmd(run_dir, ["--tuner", tuner]), env=env,
+                         stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+                         text=True)
+    jpath = str(run_dir / "records.json.journal.jsonl")
+    deadline = time.monotonic() + 120
+    # wait until some measurements landed so the kill interrupts a search
+    # in progress rather than start-up
+    while time.monotonic() < deadline:
+        if os.path.exists(jpath) and len(_journal_keys(jpath)) >= 3:
+            break
+        if p.poll() is not None:
+            pytest.fail(f"tune exited early: {p.communicate()[1]}")
+        time.sleep(0.05)
+    p.send_signal(signal.SIGTERM)
+    out, err = p.communicate(timeout=120)
+    assert p.returncode == 130, (out, err)
+    assert "rerun with --resume" in out
+    interrupted_keys = _journal_keys(jpath)
+    assert 0 < len(interrupted_keys) < len(ref_keys)
+
+    # resume: finishes the search; the combined journal replays the
+    # reference's visited sequence exactly and the record matches
+    r2 = subprocess.run(_tune_cmd(run_dir, ["--tuner", tuner, "--resume"]),
+                        env=env, capture_output=True, text=True, timeout=300)
+    assert r2.returncode == 0, r2.stderr
+    assert _journal_keys(jpath) == ref_keys
+    recs = json.load(open(run_dir / "records.json"))
+    assert sorted(recs) == sorted(ref_recs)
+    for key in recs:
+        assert recs[key]["cost"] == ref_recs[key]["cost"]
+        assert recs[key]["state"] == ref_recs[key]["state"]
+
+    # resuming the finished run is a no-op served from the done marker
+    r3 = subprocess.run(_tune_cmd(run_dir, ["--tuner", tuner, "--resume"]),
+                        env=env, capture_output=True, text=True, timeout=300)
+    assert r3.returncode == 0, r3.stderr
+    assert "already complete" in r3.stdout
+    assert _journal_keys(jpath) == ref_keys  # no new measurements
+
+
+@pytest.mark.slow
+def test_cli_resume_without_snapshot_is_a_fresh_run(tmp_path):
+    env = _env()
+    d = tmp_path / "fresh"
+    d.mkdir()
+    r = subprocess.run(
+        _tune_cmd(d, ["--tuner", "random", "--resume"]),
+        env=env, capture_output=True, text=True, timeout=300,
+    )
+    assert r.returncode == 0, r.stderr
+    assert json.load(open(d / "records.json"))
