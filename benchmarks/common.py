@@ -71,7 +71,8 @@ def true_cost(space: GemmConfigSpace, state) -> float:
 
 def run_tuner(space, tuner_name: str, budget: Budget, seed: int = 0,
               noise: float = 0.1, n_workers: int = 1, journal=None,
-              executor=None, analyze: str = "off", stats=None):
+              executor=None, analyze: str = "off", stats=None,
+              learned_filter=None):
     """One tuning run under the paper protocol.  ``n_workers`` spreads
     each proposed candidate batch over parallel engine lanes (the trial
     sequence is unchanged; only the clock compresses); ``journal`` plugs
@@ -81,9 +82,11 @@ def run_tuner(space, tuner_name: str, budget: Budget, seed: int = 0,
     speedups are wall-clock parallelism, not simulated compression.
     ``analyze`` turns on the engine's static pre-filter (``warn`` or
     ``prune``, see ``repro.core.analysis``); ``stats`` plugs in a shared
-    :class:`MeasureStats` so callers can read ``trials_avoided``.  With
-    everything at defaults the engine-free path is bit-identical to the
-    historical protocol."""
+    :class:`MeasureStats` so callers can read ``trials_avoided``;
+    ``learned_filter`` plugs a :class:`repro.core.learn.ProposalFilter`
+    into the engine (score each wave, really measure only the predicted
+    best).  With everything at defaults the engine-free path is
+    bit-identical to the historical protocol."""
     from repro.core.executor import make_executor
 
     cost = make_cost(space, seed=seed, noise=noise)
@@ -92,7 +95,8 @@ def run_tuner(space, tuner_name: str, budget: Budget, seed: int = 0,
         executor = make_executor(executor)
     engine = None
     if (journal is not None or n_workers > 1 or executor is not None
-            or analyze != "off" or stats is not None):
+            or analyze != "off" or stats is not None
+            or learned_filter is not None):
         engine = MeasureEngine(
             cost,
             n_workers=n_workers,
@@ -101,6 +105,7 @@ def run_tuner(space, tuner_name: str, budget: Budget, seed: int = 0,
             executor=executor,
             analyze=analyze,
             stats=stats,
+            learned_filter=learned_filter,
         )
     tuner = TUNERS[tuner_name](space, cost, seed=seed, **TUNER_KW.get(tuner_name, {}))
     try:

@@ -27,9 +27,20 @@ not a claim:
     transients: the hardened path's throughput under realistic lane
     mortality, every cost finite.
 
+  * **learned_filter** — a fig7-miniature quality check for the learned
+    proposal filter (``repro.core.learn``): tune three training shapes
+    unfiltered into a journal, then tune the fig7 target shape twice
+    with identical tuner/seed/budget — once plain, once with a
+    :class:`ProposalFilter` trained on the cross-shape corpus — and
+    compare real measurements dispatched and final (noise-free) best
+    cost.
+
 Acceptance: warm trials/sec >= 3x the cold serial baseline on the quick
-shape (``meets_3x_warm_speedup`` in the JSON), and faulted process-lane
-trials/sec >= 2x the cold serial baseline (``meets_2x_fault_speedup``).
+shape (``meets_3x_warm_speedup`` in the JSON), faulted process-lane
+trials/sec >= 2x the cold serial baseline (``meets_2x_fault_speedup``),
+and the filtered search dispatches >= 30% fewer real measurements
+(``meets_30pct_fewer_measurements``) while landing a true best cost
+within 5% of the unfiltered run (``best_within_5pct``).
 
 Usage::
 
@@ -92,6 +103,92 @@ def _compile_block(stats: MeasureStats) -> dict:
         "n_evictions": stats.n_compile_evictions,
         "compile_s": round(stats.compile_s, 3),
         "compile_cache_hit_rate": round(stats.compile_cache_hit_rate(), 4),
+    }
+
+
+def _learned_filter_phase(quick: bool, workdir: str) -> dict:
+    """Filtered vs unfiltered search on the fig7 shape, same budget.
+
+    Everything runs on the analytical oracle (the fig7 protocol): the
+    phase scores search *quality*, not compile throughput, and the
+    analytical model makes the corpus, the trial sequence, and the
+    final noise-free scoring deterministic across hosts.  The corpus
+    comes from shapes the target was never tuned at, so the filter is
+    exercised exactly as deployed: ranking a shape its model never saw.
+    """
+    from repro.core import Budget, TrialJournal
+    from repro.core.learn import ProposalFilter
+    from repro.core.measure import MeasureStats
+
+    from .common import make_cost, run_tuner
+
+    n_workers = 8
+    tuner = "g-bfs"
+    # the budget is NOT scaled down for --quick: greedy BFS needs room
+    # to reconverge after the filter prunes a descent direction (at 160
+    # trials the filtered search lands ~8x off; at 320 it matches the
+    # unfiltered best), and the analytical oracle keeps 320 trials cheap
+    train_budget = Budget(max_trials=120)
+    target_budget = Budget(max_trials=320)
+    train_shapes = [(512, 512, 512), (512, 1024, 512), (1024, 512, 1024)]
+    target_shape = (1024, 1024, 1024)  # the fig7 protocol shape
+
+    corpus = os.path.join(workdir, "learned-corpus.jsonl")
+    with TrialJournal(corpus) as journal:
+        for m, k, n in train_shapes:
+            run_tuner(GemmConfigSpace(m, k, n), tuner, train_budget,
+                      seed=0, n_workers=n_workers, journal=journal)
+
+    target = GemmConfigSpace(*target_shape)
+    fingerprint = make_cost(target, seed=0).measure_fingerprint()
+
+    def target_run(tag: str, filtered: bool):
+        # each run gets its own copy of the corpus: the two searches
+        # must not serve each other's target-shape rows as cache hits
+        jpath = os.path.join(workdir, f"learned-{tag}.jsonl")
+        shutil.copyfile(corpus, jpath)
+        stats = MeasureStats()
+        with TrialJournal(jpath) as journal:
+            flt = None
+            if filtered:
+                flt = ProposalFilter(
+                    target, journal, dtype="bfloat16",
+                    fingerprint=fingerprint, keep=0.5,
+                    retrain_every=8, min_rows=64,
+                )
+            _res, final = run_tuner(
+                target, tuner, target_budget, seed=0,
+                n_workers=n_workers, journal=journal, stats=stats,
+                learned_filter=flt,
+            )
+        return stats, final
+
+    t0 = time.perf_counter()
+    plain_stats, plain_best = target_run("plain", filtered=False)
+    flt_stats, flt_best = target_run("filtered", filtered=True)
+    elapsed = time.perf_counter() - t0
+
+    reduction = 1.0 - flt_stats.n_dispatched / max(1, plain_stats.n_dispatched)
+    within_5pct = flt_best <= plain_best * 1.05
+    return {
+        "tuner": tuner,
+        "n_workers": n_workers,
+        "keep_frac": 0.5,
+        "train_shapes": [list(s) for s in train_shapes],
+        "target_shape": list(target_shape),
+        "budget_trials": target_budget.max_trials,
+        "n_measured_unfiltered": plain_stats.n_dispatched,
+        "n_measured_filtered": flt_stats.n_dispatched,
+        "trials_avoided_learned": flt_stats.trials_avoided_learned,
+        "measurement_reduction_frac": round(reduction, 4),
+        "n_learned_retrains": flt_stats.n_learned_retrains,
+        "learn_s": round(flt_stats.learn_s, 3),
+        "best_cost_unfiltered": plain_best,
+        "best_cost_filtered": flt_best,
+        "best_cost_ratio": round(flt_best / plain_best, 4),
+        "elapsed_s": round(elapsed, 3),
+        "meets_30pct_fewer_measurements": reduction >= 0.30,
+        "best_within_5pct": within_5pct,
     }
 
 
@@ -317,6 +414,16 @@ def main(
             }
             result["meets_2x_fault_speedup"] = fault_tps / base_tps >= 2.0
 
+        # ---- learned proposal filter: fig7-miniature quality check ---------
+        # analytical oracle, no XLA: filtered vs unfiltered search on the
+        # fig7 shape with a cross-shape training corpus
+        lf = _learned_filter_phase(quick, tmp_journal)
+        result["learned_filter"] = lf
+        result["meets_30pct_fewer_measurements"] = (
+            lf["meets_30pct_fewer_measurements"]
+        )
+        result["best_within_5pct"] = lf["best_within_5pct"]
+
         result["meets_3x_warm_speedup"] = sim_block["warm_speedup"] >= 3.0
     finally:
         shutil.rmtree(tmp_journal, ignore_errors=True)
@@ -345,6 +452,28 @@ def main(
             print(
                 "measure,WARNING,faulted throughput "
                 f"{fi['fault_speedup_vs_cold']}x below the 2x acceptance bar",
+                file=sys.stderr,
+            )
+    if "learned_filter" in result:
+        lf = result["learned_filter"]
+        print(
+            f"measure,learned_filter_measurements,"
+            f"{lf['n_measured_filtered']}/{lf['n_measured_unfiltered']}"
+            f",reduction={lf['measurement_reduction_frac']}"
+            f",best_ratio={lf['best_cost_ratio']}"
+        )
+        if not lf["meets_30pct_fewer_measurements"]:
+            print(
+                "measure,WARNING,learned filter saved only "
+                f"{lf['measurement_reduction_frac']:.0%} of real "
+                "measurements (bar: 30%)",
+                file=sys.stderr,
+            )
+        if not lf["best_within_5pct"]:
+            print(
+                "measure,WARNING,filtered best cost "
+                f"{lf['best_cost_ratio']}x the unfiltered best "
+                "(bar: within 5%)",
                 file=sys.stderr,
             )
     print(f"measure,artifact,{out}")

@@ -63,16 +63,40 @@ def diff_measure(
     threshold: float = 0.20,
 ) -> int:
     """Fail (return 1) when warm-cache trials/sec regressed more than
-    ``threshold`` vs the committed baseline.  A missing baseline (first
-    PR to record the bench, or a fresh clone) passes with a note —
-    history has to start somewhere."""
+    ``threshold`` vs the committed baseline, or when the learned-filter
+    quality block (present since the ``repro.core.learn`` PR) misses its
+    acceptance bars in the *current* run — >=30% fewer real
+    measurements at a true best cost within 5% of the unfiltered
+    search.  A missing baseline (first PR to record the bench, or a
+    fresh clone) passes with a note — history has to start somewhere."""
     with open(current) as f:
         cur = json.load(f)
+    rc = 0
+    lf = cur.get("learned_filter")
+    if lf is not None:
+        # quality invariants hold run-by-run, no baseline needed (the
+        # block is absent from pre-learn artifacts, which is fine)
+        if not lf.get("meets_30pct_fewer_measurements", False):
+            print(
+                "measure-diff,FAIL,learned filter saved only "
+                f"{lf.get('measurement_reduction_frac', '?')} of real "
+                "measurements (bar: 0.30)",
+                file=sys.stderr,
+            )
+            rc = 1
+        if not lf.get("best_within_5pct", False):
+            print(
+                "measure-diff,FAIL,learned-filtered best cost "
+                f"{lf.get('best_cost_ratio', '?')}x the unfiltered best "
+                "(bar: 1.05)",
+                file=sys.stderr,
+            )
+            rc = 1
     try:
         prev = _load_baseline(base)
     except (subprocess.CalledProcessError, FileNotFoundError, json.JSONDecodeError):
         print(f"measure-diff,baseline_missing,{base}")
-        return 0
+        return rc
     cur_tps, prev_tps = _warm_tps(cur), _warm_tps(prev)
     regression = 1.0 - cur_tps / prev_tps if prev_tps > 0 else 0.0
     print(f"measure-diff,baseline_warm_trials_per_s,{prev_tps}")
@@ -86,8 +110,9 @@ def diff_measure(
             file=sys.stderr,
         )
         return 1
-    print(f"measure-diff,OK,within {threshold:.0%}")
-    return 0
+    if rc == 0:
+        print(f"measure-diff,OK,within {threshold:.0%}")
+    return rc
 
 
 def diff_serve(

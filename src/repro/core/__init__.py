@@ -8,6 +8,7 @@ Public surface:
   ops.*  (OpSpec / get_op / OPS)           — the operator registry
   cost.*                                   — pluggable cost oracles
   analysis.* (ScheduleAnalyzer)            — compile-free static verdicts
+  learn.*  (RankingCostModel / ProposalFilter) — journal-trained cost models
   tuners.*                                 — G-BFS, N-A2C + baselines
   TuningSession / Workload (GemmWorkload)  — orchestration
   TuningRecords                            — persisted best configs
@@ -49,6 +50,13 @@ from .fault import (
     classify_error,
 )
 from .flash_space import FlashAttnConfigSpace, FlashScheduleState
+from .learn import (
+    JournalDataset,
+    ProposalFilter,
+    RankingCostModel,
+    build_dataset,
+    learn_cache_dir_for,
+)
 from .measure import MeasureEngine, MeasureOutcome, MeasureStats
 from .ops import OPS, OpSpec, get_op, op_names, register_op
 from .records import (
@@ -109,6 +117,11 @@ __all__ = [
     "SimulatedExecutor",
     "ThreadExecutor",
     "make_executor",
+    "JournalDataset",
+    "ProposalFilter",
+    "RankingCostModel",
+    "build_dataset",
+    "learn_cache_dir_for",
     "MeasureEngine",
     "MeasureOutcome",
     "MeasureStats",

@@ -49,6 +49,7 @@ from .space import State
 from .cost.base import CostBackend
 from .executor import LaneExecutor, LaneResult, SimulatedExecutor
 from .fault import RetryPolicy, TRANSIENT_KINDS, classify_error
+from .learn.filter import ProposalFilter
 from .records import TrialJournal
 
 __all__ = ["MeasureEngine", "MeasureOutcome", "MeasureStats"]
@@ -69,6 +70,10 @@ class MeasureOutcome:
     #: retries exhausted on transient failures — the ``inf`` says "the
     #: lanes kept dying", NOT "this schedule is infeasible"
     failed_transient: bool = False
+    #: learned-filter skip: the model's rank score (lower = predicted
+    #: better).  The ``inf`` cost means "not measured this run", NOT
+    #: "infeasible" — the journal row is provenance, never a cache entry
+    predicted: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -96,6 +101,10 @@ class MeasureStats:
     trials_avoided: int = 0  # candidates rejected without occupying a lane
     n_static_flags: int = 0  # advisory verdicts (warn mode, or non-pruned WASTEFUL)
     static_s: float = 0.0  # wall seconds spent in the analyzer
+    # -- learned proposal filter (see repro.core.learn; zero without one) ----
+    trials_avoided_learned: int = 0  # candidates skipped on a model's say-so
+    n_learned_retrains: int = 0  # mid-search refits from fresh journal rows
+    learn_s: float = 0.0  # wall seconds spent scoring + retraining
     # -- fault tolerance (see repro.core.fault; zero without a RetryPolicy) --
     n_retries: int = 0  # transient-failure re-dispatches
     retry_backoff_s: float = 0.0  # backoff charged to the clock by retries
@@ -153,6 +162,7 @@ class MeasureEngine:
         analyzer: Optional[ScheduleAnalyzer] = None,
         retry: Optional[RetryPolicy] = None,
         straggler_factor: float = 8.0,
+        learned_filter: Optional[ProposalFilter] = None,
     ):
         if analyze not in ("off", "warn", "prune"):
             raise ValueError(
@@ -202,6 +212,12 @@ class MeasureEngine:
         # wave median is counted in stats.n_stragglers (real executors
         # with ≥3 lanes only — detection, not re-measurement)
         self.straggler_factor = straggler_factor
+        # learned proposal filter: with a ProposalFilter, each wave's
+        # cache-missing candidates are scored by the journal-trained
+        # rank model and only the predicted-best fraction is really
+        # measured (skips journal as {"c": null, "pred": score}
+        # provenance rows); None keeps the historical path bit-identical
+        self.learned_filter = learned_filter
 
     @property
     def analyzer(self) -> ScheduleAnalyzer:
@@ -375,6 +391,35 @@ class MeasureEngine:
                     kept.append(i)
             miss_idx = kept
             self.stats.static_s += time.perf_counter() - t0
+        if self.learned_filter is not None:
+            # learned proposal filter: retrain at its cadence from the
+            # journal rows accumulated so far (this very search's rows
+            # included), then measure only the wave's predicted-best
+            # fraction.  A skip is an inf outcome carrying the score and
+            # a {"c": null, "pred": score} provenance row — never a
+            # cost-table entry, so nothing downstream can ever serve the
+            # guess as a measurement.  The trial is still charged by
+            # TuningContext, exactly like a static prune.
+            flt = self.learned_filter
+            learn_before = flt.learn_s
+            retrains_before = flt.n_retrains
+            flt.maybe_retrain()
+            if len(miss_idx) >= 2:
+                kept_rel, skipped_rel = flt.select([states[i] for i in miss_idx])
+                for rel, score in skipped_rel:
+                    i = miss_idx[rel]
+                    s = states[i]
+                    outcomes[i] = MeasureOutcome(
+                        s, math.inf, False, 0.0, predicted=score
+                    )
+                    self.stats.trials_avoided_learned += 1
+                    if self.journal is not None and self.journal_key is not None:
+                        self.journal.record_predicted(
+                            self.journal_key, s, score, op=self.backend.op
+                        )
+                miss_idx = [miss_idx[rel] for rel in kept_rel]
+            self.stats.learn_s += flt.learn_s - learn_before
+            self.stats.n_learned_retrains += flt.n_retrains - retrains_before
         if miss_idx:
             # NOTE: self.timeout_s is the *simulated charging cap* (a slow
             # config charges at most that much search clock); the real

@@ -279,6 +279,9 @@ class TrialJournal:
         # transient-failure provenance rows already journaled (kept OUT of
         # the cost table — see record_failure)
         self._transient_seen: dict[str, set] = {}
+        # learned-filter skip rows already journaled (provenance only —
+        # a prediction must never be served as a measurement)
+        self._pred_seen: dict[str, set] = {}
         self._fd: Optional[int] = None
         self._read_pos = 0  # how far reload() has consumed the file
         if path:
@@ -326,6 +329,16 @@ class TrialJournal:
                         # out of the cost table — a later analyze=off run
                         # must re-measure the state, not cache-hit inf
                         self._static_seen.setdefault(
+                            row["w"], set()
+                        ).add(row["k"])
+                        continue
+                    if isinstance(row, dict) and "pred" in row:
+                        # learned-filter skip row (a *prediction*, not a
+                        # measurement): provenance only — without this
+                        # branch the row would fall through below and be
+                        # ingested as a cacheable inf "failure", poisoning
+                        # the cost table with guesses
+                        self._pred_seen.setdefault(
                             row["w"], set()
                         ).add(row["k"])
                         continue
@@ -545,6 +558,29 @@ class TrialJournal:
                 return
             row = {"w": workload, "k": key, "s": state.as_lists(),
                    "op": op, "c": None, "static": str(reason)}
+            self._append_row(row)
+
+    def record_predicted(self, workload: str, state: State, score: float,
+                         op: Optional[str] = None) -> None:
+        """Journal a learned-filter skip as a **provenance row**:
+        ``{"c": null, "pred": <score>}`` — the model's rank score, not a
+        runtime.  Like :meth:`record_static` this never enters the cost
+        table: the candidate was never measured, and a later unfiltered
+        run must measure it rather than cache-hit a guess.  Legacy
+        readers that ignore the ``pred`` field see ``c=None`` (a
+        failure row), which is safe."""
+        if op is None:
+            op = op_of_workload_key(workload)
+        with self._lock:
+            seen = self._pred_seen.setdefault(workload, set())
+            key = state.key()
+            if key in seen:
+                return
+            seen.add(key)
+            if not self.path:
+                return
+            row = {"w": workload, "k": key, "s": state.as_lists(),
+                   "op": op, "c": None, "pred": float(score)}
             self._append_row(row)
 
     def close(self) -> None:

@@ -39,6 +39,7 @@ from typing import Callable, Optional, Sequence
 from .cost import CostBackend
 from .executor import LaneExecutor, make_executor
 from .fault import RetryPolicy
+from .learn import ProposalFilter
 from .measure import MeasureEngine, MeasureStats
 from .records import (
     TrialJournal,
@@ -306,7 +307,15 @@ class TuningSession:
         retry: Optional[RetryPolicy] = None,
         checkpointer: Optional[TuneCheckpointer] = None,
         resume: bool = False,
+        learned_filter: str = "off",
+        filter_keep: float = 0.5,
+        filter_retrain_every: int = 8,
+        filter_min_rows: int = 32,
     ) -> TuneResult:
+        if learned_filter not in ("off", "on"):
+            raise ValueError(
+                f"learned_filter must be 'off' or 'on', got {learned_filter!r}"
+            )
         space = wl.space()
         cost = self.cost_factory(space)
         wkey = wl.key(cost.name)
@@ -323,6 +332,11 @@ class TuningSession:
         if engine is not None and retry is not None and retry.enabled and engine.retry != retry:
             raise ValueError(
                 "retry=... conflicts with the provided engine's retry policy"
+            )
+        if engine is not None and learned_filter == "on" and engine.learned_filter is None:
+            raise ValueError(
+                "learned_filter='on' conflicts with the provided engine "
+                "(it has no ProposalFilter)"
             )
         # -- crash-safe resume: serve finished workloads from their done
         # snapshot, restore interrupted ones mid-search -----------------------
@@ -344,6 +358,20 @@ class TuningSession:
             # must not shadow this run for a later --resume
             checkpointer.clear(wkey, tuner_name)
         if engine is None:
+            flt = None
+            if learned_filter == "on":
+                # per-workload filter: the model's scope is this space's
+                # op/feature-width + the backend's dtype/fingerprint, and
+                # its cache lives next to the session journal
+                flt = ProposalFilter(
+                    space,
+                    self.journal,
+                    dtype=wl.dtype,
+                    fingerprint=cost.measure_fingerprint(),
+                    keep=filter_keep,
+                    retrain_every=filter_retrain_every,
+                    min_rows=filter_min_rows,
+                )
             engine = MeasureEngine(
                 cost,
                 n_workers=n_workers,
@@ -354,6 +382,7 @@ class TuningSession:
                 reload_every=reload_every,
                 analyze=analyze,
                 retry=retry,
+                learned_filter=flt,
             )
         budget = budget or Budget(max_fraction=0.001)
         tuner_cls = TUNERS[tuner_name]
@@ -436,6 +465,10 @@ class TuningSession:
         retry: Optional[RetryPolicy] = None,
         checkpointer: Optional[TuneCheckpointer] = None,
         resume: bool = False,
+        learned_filter: str = "off",
+        filter_keep: float = 0.5,
+        filter_retrain_every: int = 8,
+        filter_min_rows: int = 32,
     ) -> ArchTuneReport:
         """Tune every distinct workload an architecture executes through
         one shared engine configuration and one shared budget pool.
@@ -509,6 +542,10 @@ class TuningSession:
                     retry=retry,
                     checkpointer=checkpointer,
                     resume=resume,
+                    learned_filter=learned_filter,
+                    filter_keep=filter_keep,
+                    filter_retrain_every=filter_retrain_every,
+                    filter_min_rows=filter_min_rows,
                 )
                 if left_trials is not None:
                     left_trials -= res.n_trials

@@ -4,7 +4,9 @@ This is the paper's primary baseline ("state-of-the-art XGBoost method"
 = AutoTVM's cost-model tuner, Chen et al. 2018b).  The container has no
 xgboost package, so the surrogate — depth-limited regression trees fit on
 residuals with shrinkage — is implemented from scratch in numpy
-(:class:`GradientBoostedTrees`).  The SMBO loop mirrors AutoTVM:
+(:class:`~repro.core.learn.gbt.GradientBoostedTrees`, shared with the
+learned-cost-model subsystem and re-exported here for back-compat).
+The SMBO loop mirrors AutoTVM:
 
   1. measure a random warmup batch,
   2. fit the surrogate on log-costs of everything measured,
@@ -24,99 +26,11 @@ import math
 
 import numpy as np
 
+from ..learn.gbt import GradientBoostedTrees
 from ..space import State
 from .base import Tuner, TuningContext
 
 __all__ = ["GBTTuner", "GradientBoostedTrees"]
-
-
-class _Tree:
-    __slots__ = ("feature", "threshold", "left", "right", "value")
-
-    def __init__(self):
-        self.feature = -1
-        self.threshold = 0.0
-        self.left = None
-        self.right = None
-        self.value = 0.0
-
-
-def _fit_tree(X: np.ndarray, y: np.ndarray, depth: int, min_samples: int) -> _Tree:
-    node = _Tree()
-    node.value = float(y.mean())
-    if depth == 0 or len(y) < 2 * min_samples or np.allclose(y, y[0]):
-        return node
-    best_gain, best = 0.0, None
-    n, f = X.shape
-    parent_sse = float(((y - y.mean()) ** 2).sum())
-    idx = np.arange(1, n, dtype=np.float64)
-    for j in range(f):
-        xs = X[:, j]
-        order = np.argsort(xs, kind="stable")
-        xs_s, ys_s = xs[order], y[order]
-        cums = np.cumsum(ys_s)[:-1]
-        cums2 = np.cumsum(ys_s**2)[:-1]
-        # vectorized SSE for every split position i in [1, n)
-        left_n, right_n = idx, n - idx
-        sse = (cums2 - cums * cums / left_n) + (
-            (cums2[-1] + ys_s[-1] ** 2 - cums2)
-            - (cums[-1] + ys_s[-1] - cums) ** 2 / right_n
-        )
-        valid = (xs_s[1:] != xs_s[:-1]) & (left_n >= min_samples) & (right_n >= min_samples)
-        if not valid.any():
-            continue
-        sse = np.where(valid, sse, np.inf)
-        i = int(np.argmin(sse))
-        gain = parent_sse - float(sse[i])
-        if gain > best_gain + 1e-12:
-            best_gain = gain
-            best = (j, 0.5 * (xs_s[i + 1] + xs_s[i]))
-    if best is None:
-        return node
-    j, thr = best
-    mask = X[:, j] <= thr
-    node.feature, node.threshold = j, thr
-    node.left = _fit_tree(X[mask], y[mask], depth - 1, min_samples)
-    node.right = _fit_tree(X[~mask], y[~mask], depth - 1, min_samples)
-    return node
-
-
-def _tree_predict(node: _Tree, X: np.ndarray) -> np.ndarray:
-    if node.feature < 0:
-        return np.full(len(X), node.value)
-    out = np.empty(len(X))
-    mask = X[:, node.feature] <= node.threshold
-    out[mask] = _tree_predict(node.left, X[mask]) if mask.any() else 0
-    out[~mask] = _tree_predict(node.right, X[~mask]) if (~mask).any() else 0
-    return out
-
-
-class GradientBoostedTrees:
-    """Squared-loss GBT with shrinkage — enough of xgboost for SMBO."""
-
-    def __init__(self, n_trees: int = 50, depth: int = 4, lr: float = 0.2,
-                 min_samples: int = 2):
-        self.n_trees, self.depth, self.lr = n_trees, depth, lr
-        self.min_samples = min_samples
-        self.base = 0.0
-        self.trees: list[_Tree] = []
-
-    def fit(self, X: np.ndarray, y: np.ndarray) -> "GradientBoostedTrees":
-        self.base = float(y.mean())
-        self.trees = []
-        pred = np.full(len(y), self.base)
-        for _ in range(self.n_trees):
-            resid = y - pred
-            t = _fit_tree(X, resid, self.depth, self.min_samples)
-            self.trees.append(t)
-            pred = pred + self.lr * _tree_predict(t, X)
-        return self
-
-    def predict(self, X: np.ndarray) -> np.ndarray:
-        pred = np.full(len(X), self.base)
-        for t in self.trees:
-            pred = pred + self.lr * _tree_predict(t, X)
-        return pred
 
 
 class GBTTuner(Tuner):

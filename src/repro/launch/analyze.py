@@ -21,7 +21,15 @@ WASTEFUL verdicts and unparseable *journal* keys are warnings: dominated
 schedules are legal to serve, and a journal is an append-only log that
 may carry foreign experiments.  ``--strict`` promotes warnings to the
 exit code.  Journal ``static`` rows (the engine's pruned-candidate audit
-trail) are counted and reported, never flagged.
+trail) and ``pred`` rows (the learned filter's skip provenance, see
+``repro.core.learn``) are counted and reported, never flagged — except a
+``pred`` row claiming a finite measured cost, which is an error: a
+prediction masquerading as a measurement.
+
+The audit also reports the learned-model training corpus per op/dtype
+(``[analyze] learn-corpus:`` lines — trainable measured rows vs
+fail/static/predicted provenance rows), so users can tell when a
+workload has accumulated enough data to train on.
 
 Usage::
 
@@ -43,6 +51,7 @@ from typing import Optional
 
 from repro.core.analysis import ScheduleAnalyzer, dtype_in_bytes
 from repro.core.fault import PERMANENT_KINDS, TRANSIENT_KINDS
+from repro.core.learn import scan_corpus
 from repro.core.ops import get_op
 from repro.core.records import (
     TrialJournal,
@@ -63,6 +72,7 @@ class _Auditor:
         self.fail_kinds: collections.Counter = collections.Counter()
         self.n_retried_rows = 0  # fail rows that record >1 attempt
         self.n_permanent_legal = 0  # permanent failures on legal schedules
+        self.n_predicted = 0  # learned-filter skip provenance rows
 
     def error(self, where: str, msg: str) -> None:
         self.errors.append(f"{where}: {msg}")
@@ -164,6 +174,21 @@ def audit_journal(path: str, auditor: _Auditor) -> tuple[int, int]:
         if "static" in row:
             n_static += 1  # the engine's pruned-candidate audit trail
             continue
+        if "pred" in row:
+            # learned-filter skip provenance: the model's rank score for
+            # a candidate that never reached a lane.  Counted, never
+            # audited as a measurement — but a finite "c" here means a
+            # prediction is posing as a measured cost, which downstream
+            # loaders would cache
+            auditor.n_predicted += 1
+            if row.get("c") is not None:
+                auditor.error(
+                    where,
+                    "predicted row carries a measured cost "
+                    f"(c={row.get('c')!r}) — predictions must be "
+                    "provenance-only",
+                )
+            continue
         # failure provenance: every fail row carries a taxonomy kind
         # (legacy rows without one are the historical failed-build inf)
         fail_kind = None
@@ -257,10 +282,20 @@ def main(argv=None) -> int:
         n_static += static
     print(
         f"[analyze] audited {n_rec} records in {len(records)} file(s), "
-        f"{n_rows} journal rows ({n_static} static audit rows) in "
+        f"{n_rows} journal rows ({n_static} static audit rows, "
+        f"{auditor.n_predicted} predicted rows) in "
         f"{len(journals)} file(s): {len(auditor.errors)} error(s), "
         f"{len(auditor.warnings)} warning(s)"
     )
+    # learned-model corpus census: trainable measured rows vs provenance
+    # rows, per op/dtype — "do I have enough data to train on yet?"
+    if journals:
+        for (op, dtype), c in sorted(scan_corpus(journals).items()):
+            print(
+                f"[analyze] learn-corpus: op={op} dtype={dtype} "
+                f"trainable={c.n_trainable} fail={c.n_fail} "
+                f"static={c.n_static} predicted={c.n_predicted}"
+            )
     # machine-greppable failure-provenance summary (CI asserts on it)
     kinds = " ".join(
         f"{k}={auditor.fail_kinds[k]}" for k in sorted(auditor.fail_kinds)

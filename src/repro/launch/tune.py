@@ -170,6 +170,24 @@ def main() -> None:
                          "'warn' classifies candidates and counts advisory "
                          "flags, 'prune' rejects provably-bad ones before "
                          "they occupy a measurement lane")
+    ap.add_argument("--learned-filter", default="off", choices=["off", "on"],
+                    help="learned proposal filter (repro.core.learn): score "
+                         "each wave's candidates with a journal-trained "
+                         "rank model and really measure only the "
+                         "predicted-best fraction; skipped candidates are "
+                         "journaled as {'c': null, 'pred': score} "
+                         "provenance rows ('off' is bit-identical to the "
+                         "historical engine)")
+    ap.add_argument("--filter-keep", type=float, default=0.5,
+                    help="fraction of each wave's candidates the learned "
+                         "filter really measures (at least 1 per wave)")
+    ap.add_argument("--filter-retrain-every", type=int, default=8,
+                    help="retrain the filter's model from fresh journal "
+                         "rows every N measurement waves")
+    ap.add_argument("--filter-min-rows", type=int, default=32,
+                    help="journal rows (same op/dtype/fingerprint) required "
+                         "before the filter starts dropping candidates; "
+                         "below it the engine measures everything")
     ap.add_argument("--retries", type=int, default=1,
                     help="max measurement attempts per candidate: transient "
                          "lane failures (crash/timeout/spawn/corrupt) are "
@@ -295,6 +313,10 @@ def main() -> None:
                 retry=retry,
                 checkpointer=checkpointer,
                 resume=args.resume,
+                learned_filter=args.learned_filter,
+                filter_keep=args.filter_keep,
+                filter_retrain_every=args.filter_retrain_every,
+                filter_min_rows=args.filter_min_rows,
             )
     except TuneInterrupted as e:
         print(
@@ -309,6 +331,8 @@ def main() -> None:
         f"compile_cache_hit={report.stats.compile_cache_hit_rate():.2f} "
         f"compiles={report.stats.n_compiles} "
         f"trials_avoided={report.stats.trials_avoided} "
+        f"trials_avoided_learned={report.stats.trials_avoided_learned} "
+        f"learned_retrains={report.stats.n_learned_retrains} "
         f"lane_failures={report.stats.n_failures})"
     )
 

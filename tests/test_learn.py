@@ -1,0 +1,414 @@
+"""The learned-cost-model subsystem (``repro.core.learn``): journal
+corpora, the pairwise rank model, content-keyed persistence, and the
+measurement proposal filter — plus its contracts with the journal row
+taxonomy (pred rows are provenance, never cache), the engine
+(``learned_filter=None`` stays bit-identical), and the launch CLIs."""
+
+import itertools
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AnalyticalTPUCost,
+    CountingCost,
+    GemmConfigSpace,
+    MeasureEngine,
+    TrialJournal,
+    workload_key,
+)
+from repro.core.learn import (
+    ProposalFilter,
+    RankingCostModel,
+    build_dataset,
+    learn_cache_dir_for,
+    scan_corpus,
+    spearman_rank_corr,
+    top_k_recall,
+)
+from repro.core.learn.gbt import PairwiseRankGBT
+
+
+# -- corpus plumbing ----------------------------------------------------------
+
+
+def _fill_journal(jpath, shapes, n_states=48):
+    """Measure the first legitimate enumerable states of each shape into
+    one journal (deterministic, noise-free analytical costs)."""
+    for m, k, n in shapes:
+        space = GemmConfigSpace(m, k, n)
+        cost = AnalyticalTPUCost(space)
+        with TrialJournal(jpath) as j:
+            eng = MeasureEngine(cost, n_workers=8, journal=j,
+                                workload_key=workload_key(m, k, n))
+            states = list(itertools.islice(
+                (s for s in space.enumerate() if space.is_legitimate(s)),
+                n_states,
+            ))
+            for i in range(0, len(states), 8):
+                eng.measure_wave(states[i : i + 8])
+    return cost.measure_fingerprint()
+
+
+def test_build_dataset_triages_row_taxonomy(tmp_path):
+    jpath = str(tmp_path / "j.jsonl")
+    space = GemmConfigSpace(64, 64, 64)
+    _fill_journal(jpath, [(64, 64, 64)], n_states=12)
+    sts = list(itertools.islice(space.enumerate(), 40, 44))
+    wkey = workload_key(64, 64, 64) + "?fp"
+    with TrialJournal(jpath) as j:
+        j.record_static(wkey, sts[0], "degenerate", op="gemm")
+        j.record_predicted(wkey, sts[1], 0.25, op="gemm")
+        j.record(wkey, sts[2], math.inf, op="gemm")  # failure row
+        j.record(wkey, sts[3], 1.0, op="gemm")
+    with open(jpath, "a") as f:  # raw duplicate (the writer dedups)
+        f.write(json.dumps({"w": wkey, "k": sts[3].key(),
+                            "s": sts[3].as_lists(), "op": "gemm",
+                            "c": 2.0}) + "\n")
+    ds = build_dataset([jpath], "gemm")
+    c = ds.counts
+    assert c.n_trainable == 13 == len(ds)  # 12 measured + 1 fresh
+    assert c.n_static == 1 and c.n_predicted == 1
+    assert c.n_fail == 1 and c.n_duplicate == 1
+    assert ds.n_features == space.n_features
+    assert ds.X.shape == (13, space.n_features)
+    assert np.isfinite(ds.X).all() and np.isfinite(ds.y).all()
+    # the census CLI path sees the same taxonomy (row-level: the
+    # census reports what the log holds, without cross-row dedup)
+    counts = scan_corpus([jpath])
+    assert counts[("gemm", "bfloat16")].n_trainable == 14
+    assert counts[("gemm", "bfloat16")].n_predicted == 1
+
+
+def test_build_dataset_groups_cross_shape(tmp_path):
+    jpath = str(tmp_path / "j.jsonl")
+    _fill_journal(jpath, [(64, 64, 64), (32, 64, 32)], n_states=10)
+    ds = build_dataset([jpath], "gemm")
+    assert ds.n_groups == 2
+    assert len(ds) == 20
+    train, held = ds.split_group(0)
+    assert len(train) == len(held) == 10
+    assert set(np.unique(held.groups)) == {0}
+
+
+def test_build_dataset_scopes_by_op_and_dtype(tmp_path):
+    jpath = str(tmp_path / "j.jsonl")
+    _fill_journal(jpath, [(64, 64, 64)], n_states=8)
+    assert len(build_dataset([jpath], "flash_attn")) == 0
+    assert len(build_dataset([jpath], "gemm", dtype="float32")) == 0
+    assert len(build_dataset([jpath], "gemm", dtype="bfloat16")) == 8
+    assert len(build_dataset([jpath], "gemm", fingerprint="nope")) == 0
+
+
+# -- the pairwise rank model --------------------------------------------------
+
+
+def test_pairwise_rank_gbt_orders_within_and_across_groups():
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(240, 6)).astype(np.float32)
+    latent = X[:, 0] * 2.0 + X[:, 1]
+    # two "shapes" with wildly different cost scales — the pairwise loss
+    # must not care (rank groups are per-shape)
+    groups = np.repeat([0, 1], 120)
+    y = np.where(groups == 0, latent, 1e4 * latent + 5e4)
+    m = PairwiseRankGBT(n_trees=40)
+    m.fit(X, y, groups)
+    pred = m.predict(X)
+    for g in (0, 1):
+        corr = spearman_rank_corr(y[groups == g], pred[groups == g],
+                                  np.zeros(120, dtype=np.intp))
+        assert corr > 0.9
+    # deterministic: refitting gives identical scores (no hidden RNG)
+    m2 = PairwiseRankGBT(n_trees=40)
+    m2.fit(X, y, groups)
+    assert np.array_equal(pred, m2.predict(X))
+
+
+def test_pairwise_rank_gbt_json_round_trip():
+    rng = np.random.default_rng(1)
+    X = rng.normal(size=(60, 4)).astype(np.float32)
+    y = X[:, 0] ** 2 + X[:, 1]
+    m = PairwiseRankGBT(n_trees=10)
+    m.fit(X, y, np.zeros(60, dtype=np.intp))
+    m2 = PairwiseRankGBT.from_jsonable(json.loads(json.dumps(m.to_jsonable())))
+    assert np.array_equal(m.predict(X), m2.predict(X))
+
+
+def test_gbt_reexport_is_the_same_object():
+    # satellite: tuners/gbt.py re-exports the lifted machinery (pinned
+    # by the CI deprecation guard too)
+    from repro.core.learn.gbt import GradientBoostedTrees as lifted
+    from repro.core.tuners.gbt import GradientBoostedTrees as legacy
+
+    assert legacy is lifted
+
+
+def test_rank_metrics_sanity():
+    y = np.array([1.0, 2.0, 3.0, 4.0])
+    g = np.zeros(4, dtype=np.intp)
+    assert spearman_rank_corr(y, y, g) == pytest.approx(1.0)
+    assert spearman_rank_corr(y, -y, g) == pytest.approx(-1.0)
+    assert top_k_recall(y, y, 2, g) == pytest.approx(1.0)
+    assert top_k_recall(y, -y, 2, g) == pytest.approx(0.0)
+
+
+# -- RankingCostModel: fit / transfer / persistence ---------------------------
+
+
+def test_model_fits_and_transfers_to_held_out_shape(tmp_path):
+    jpath = str(tmp_path / "j.jsonl")
+    _fill_journal(jpath, [(64, 64, 64), (32, 64, 32), (64, 32, 64)],
+                  n_states=48)
+    ds = build_dataset([jpath], "gemm")
+    train, held = ds.split_group(2)
+    model = RankingCostModel.fit_dataset(train)
+    assert model.is_fitted
+    in_sample = model.evaluate(train)
+    assert in_sample["rank_corr"] > 0.8
+    # rank a shape the model never saw (the filter's deployment mode)
+    held_corr = spearman_rank_corr(held.y, model.predict(held.X), held.groups)
+    assert held_corr > 0.5
+
+
+def test_model_persistence_round_trip_and_content_key(tmp_path):
+    jpath = str(tmp_path / "j.jsonl")
+    _fill_journal(jpath, [(64, 64, 64)], n_states=32)
+    ds = build_dataset([jpath], "gemm")
+    model = RankingCostModel.fit_dataset(ds)
+    cache = str(tmp_path / "cache")
+    path = model.save(cache)
+    hit = RankingCostModel.load_for(cache, "gemm", ds.dtype, ds.fingerprint,
+                                    ds.n_features)
+    assert hit is not None and hit.is_fitted
+    assert hit.n_rows_trained == model.n_rows_trained == len(ds)
+    assert np.array_equal(hit.predict(ds.X), model.predict(ds.X))
+    # a different scope/hyper hashes to a different key -> miss
+    assert RankingCostModel.load_for(cache, "gemm", ds.dtype, ds.fingerprint,
+                                     ds.n_features, n_trees=7) is None
+    assert RankingCostModel.load_for(cache, "flash_attn", ds.dtype,
+                                     ds.fingerprint, ds.n_features) is None
+    # corrupted file -> clean miss, not a crash
+    with open(path, "w") as f:
+        f.write("{not json")
+    assert RankingCostModel.load(path) is None
+
+
+def test_model_rejects_wrong_feature_width(tmp_path):
+    jpath = str(tmp_path / "j.jsonl")
+    _fill_journal(jpath, [(64, 64, 64)], n_states=16)
+    ds = build_dataset([jpath], "gemm")
+    model = RankingCostModel.fit_dataset(ds)
+    with pytest.raises(ValueError, match="feature"):
+        model.predict(np.zeros((3, ds.n_features + 1), dtype=np.float32))
+
+
+# -- ProposalFilter -----------------------------------------------------------
+
+
+def test_filter_validates_keep_fraction(small_space):
+    for bad in (0.0, -0.5, 1.5):
+        with pytest.raises(ValueError, match="keep"):
+            ProposalFilter(small_space, None, keep=bad)
+
+
+def test_filter_passes_through_until_trained(tmp_path, small_space):
+    jpath = str(tmp_path / "j.jsonl")
+    with TrialJournal(jpath) as j:
+        flt = ProposalFilter(small_space, j, min_rows=10_000)
+        assert not flt.active
+        assert not flt.maybe_retrain()
+        states = list(itertools.islice(small_space.enumerate(), 8))
+        kept, skipped = flt.select(states)
+        assert kept == list(range(8)) and skipped == []
+
+
+def test_filter_selects_keep_fraction_in_dispatch_order(tmp_path, small_space):
+    jpath = str(tmp_path / "j.jsonl")
+    fp = _fill_journal(jpath, [(64, 64, 64)], n_states=48)
+    with TrialJournal(jpath) as j:
+        flt = ProposalFilter(small_space, j, fingerprint=fp, keep=0.5,
+                             min_rows=16)
+        assert flt.maybe_retrain() and flt.active and flt.n_retrains == 1
+        states = list(itertools.islice(small_space.enumerate(), 100, 108))
+        kept, skipped = flt.select(states)
+        assert len(kept) == 4 and len(skipped) == 4
+        assert kept == sorted(kept)  # deterministic dispatch order
+        assert sorted(kept + [i for i, _ in skipped]) == list(range(8))
+        assert all(math.isfinite(score) for _, score in skipped)
+        # at least one candidate always reaches a lane
+        kept1, skipped1 = flt.select(states[:2])
+        assert len(kept1) == 1 and len(skipped1) == 1
+        # retrain is a no-op until the corpus grows
+        flt._waves_since_check = flt.retrain_every
+        assert not flt.maybe_retrain()
+
+
+def test_filter_prewarms_from_model_cache(tmp_path, small_space):
+    jpath = str(tmp_path / "j.jsonl")
+    fp = _fill_journal(jpath, [(64, 64, 64)], n_states=48)
+    with TrialJournal(jpath) as j:
+        flt = ProposalFilter(small_space, j, fingerprint=fp, min_rows=16)
+        flt.maybe_retrain()
+        assert flt.active
+    # a later session's filter is fitted before its first wave
+    with TrialJournal(jpath) as j2:
+        flt2 = ProposalFilter(small_space, j2, fingerprint=fp, min_rows=16)
+        assert flt2.active and flt2.n_retrains == 0
+        assert flt2.cache_dir == learn_cache_dir_for(jpath)
+
+
+# -- engine integration -------------------------------------------------------
+
+
+def _filtered_engine(space, jpath, fingerprint, **kw):
+    j = TrialJournal(jpath)
+    flt = ProposalFilter(space, j, fingerprint=fingerprint, keep=0.5,
+                         min_rows=16, **kw)
+    cc = CountingCost(AnalyticalTPUCost(space))
+    eng = MeasureEngine(cc, n_workers=8, journal=j,
+                        workload_key=workload_key(64, 64, 64),
+                        learned_filter=flt)
+    return cc, eng, j
+
+
+def test_engine_skips_predicted_slow_candidates(tmp_path, small_space):
+    jpath = str(tmp_path / "j.jsonl")
+    fp = _fill_journal(jpath, [(32, 64, 32)], n_states=48)  # sibling shape
+    cc, eng, j = _filtered_engine(small_space, jpath, fp)
+    try:
+        states = list(itertools.islice(small_space.enumerate(), 200, 208))
+        outs = eng.measure_wave(states)
+    finally:
+        j.close()
+    assert cc.n_measured == 4
+    assert eng.stats.n_dispatched == 4
+    assert eng.stats.trials_avoided_learned == 4
+    assert eng.stats.n_learned_retrains == 1
+    assert eng.stats.learn_s > 0.0
+    skipped = [o for o in outs if o.predicted is not None]
+    assert len(skipped) == 4
+    for o in skipped:
+        assert o.cost == math.inf and not o.cache_hit
+        assert math.isfinite(o.predicted)
+    # skip provenance is journaled, deduped on re-encounter
+    rows = [json.loads(line) for line in open(jpath)]
+    pred_rows = [r for r in rows if "pred" in r]
+    assert len(pred_rows) == 4
+    for r in pred_rows:
+        assert r["c"] is None and math.isfinite(r["pred"])
+        assert r["op"] == "gemm"
+
+
+def test_pred_rows_never_served_as_cache_hits(tmp_path, small_space):
+    jpath = str(tmp_path / "j.jsonl")
+    fp = _fill_journal(jpath, [(32, 64, 32)], n_states=48)
+    cc, eng, j = _filtered_engine(small_space, jpath, fp)
+    try:
+        states = list(itertools.islice(small_space.enumerate(), 200, 208))
+        outs = eng.measure_wave(states)
+        skipped_keys = {o.state.key() for o in outs if o.predicted is not None}
+    finally:
+        j.close()
+    # a fresh journal reload keeps pred rows out of the cost table...
+    with TrialJournal(jpath) as j2:
+        wkey = f"{workload_key(64, 64, 64)}?{fp}"
+        for key in skipped_keys:
+            assert j2.get(wkey, key) is None
+        # ...so an UNFILTERED engine re-measures every skipped state
+        cc2 = CountingCost(AnalyticalTPUCost(small_space))
+        eng2 = MeasureEngine(cc2, n_workers=8, journal=j2,
+                             workload_key=workload_key(64, 64, 64))
+        outs2 = eng2.measure_wave(states)
+    remeasured = [o for o in outs2 if o.state.key() in skipped_keys]
+    assert len(remeasured) == len(skipped_keys)
+    assert all(not o.cache_hit and math.isfinite(o.cost) for o in remeasured)
+    # the 4 really-measured states DO cache-hit (legacy rows unaffected)
+    assert eng2.stats.n_cache_hits == 4
+    assert cc2.n_measured == 4
+
+
+def test_engine_without_filter_is_bit_identical(small_space):
+    states = list(itertools.islice(small_space.enumerate(), 300, 316))
+    eng_none = MeasureEngine(AnalyticalTPUCost(small_space), n_workers=8,
+                             learned_filter=None)
+    eng_plain = MeasureEngine(AnalyticalTPUCost(small_space), n_workers=8)
+    outs_a, outs_b = [], []
+    for i in range(0, len(states), 8):
+        outs_a.extend(eng_none.measure_wave(states[i : i + 8]))
+        outs_b.extend(eng_plain.measure_wave(states[i : i + 8]))
+    assert [(o.state.key(), o.cost) for o in outs_a] == [
+        (o.state.key(), o.cost) for o in outs_b
+    ]
+    assert eng_none.stats.trials_avoided_learned == 0
+    assert eng_none.stats.learn_s == 0.0
+
+
+def test_inactive_filter_measures_everything(tmp_path, small_space):
+    # journal too small to train: the filter is plugged in but inert
+    jpath = str(tmp_path / "j.jsonl")
+    fp = _fill_journal(jpath, [(32, 64, 32)], n_states=4)
+    cc, eng, j = _filtered_engine(small_space, jpath, fp)
+    try:
+        states = list(itertools.islice(small_space.enumerate(), 200, 208))
+        outs = eng.measure_wave(states)
+    finally:
+        j.close()
+    assert cc.n_measured == 8
+    assert eng.stats.trials_avoided_learned == 0
+    assert all(o.predicted is None for o in outs)
+
+
+# -- session/CLI plumbing -----------------------------------------------------
+
+
+def test_session_rejects_bad_filter_mode(tmp_path):
+    from repro.core import GemmWorkload, TuningSession
+
+    from repro.core import Budget
+
+    sess = TuningSession(verbose=False)
+    with pytest.raises(ValueError, match="learned.filter"):
+        sess.tune_workload(GemmWorkload(64, 64, 64), "random",
+                           budget=Budget(max_trials=2),
+                           learned_filter="sometimes")
+
+
+def test_analyze_cli_flags_pred_row_posing_as_measurement(tmp_path, capsys):
+    from repro.launch.analyze import main as analyze_main
+
+    jpath = str(tmp_path / "j.jsonl")
+    _fill_journal(jpath, [(64, 64, 64)], n_states=8)
+    space = GemmConfigSpace(64, 64, 64)
+    s = next(iter(space.enumerate()))
+    wkey = workload_key(64, 64, 64) + "?fp"
+    with TrialJournal(jpath) as j:
+        j.record_predicted(wkey, s, 0.5, op="gemm")
+    assert analyze_main(["--journal", jpath]) == 0
+    out = capsys.readouterr().out
+    assert "1 predicted rows" in out
+    assert "learn-corpus: op=gemm dtype=bfloat16 trainable=8" in out
+    # a pred row claiming a finite measured cost is an error
+    with open(jpath, "a") as f:
+        f.write(json.dumps({"w": wkey, "k": "bogus", "s": s.as_lists(),
+                            "op": "gemm", "c": 1.0, "pred": 0.5}) + "\n")
+    assert analyze_main(["--journal", jpath]) == 1
+    assert "provenance-only" in capsys.readouterr().out
+
+
+def test_learn_cli_train_then_eval(tmp_path, capsys):
+    from repro.launch.learn import main as learn_main
+
+    jpath = str(tmp_path / "j.jsonl")
+    _fill_journal(jpath, [(64, 64, 64), (32, 64, 32), (64, 32, 64)],
+                  n_states=32)
+    assert learn_main(["train", "--journal", jpath]) == 0
+    out = capsys.readouterr().out
+    assert "saved model to" in out
+    import glob
+    assert glob.glob(learn_cache_dir_for(jpath) + "/rankmodel-*.json")
+    assert learn_main(["eval", "--journal", jpath, "--min-corr", "0.0"]) == 0
+    assert "held_out_rank_corr=" in capsys.readouterr().out
+    # an unreachable gate fails the exit code (the CI contract)
+    assert learn_main(["eval", "--journal", jpath, "--min-corr", "1.0"]) == 1

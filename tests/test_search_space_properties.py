@@ -131,6 +131,45 @@ def test_cross_op_transplant_refused(pair):
     assert other.transplant(s) is None
 
 
+@given(space_and_state(), st.integers(0, 10_000))
+@settings(max_examples=60, deadline=None)
+def test_features_pure_finite_consistent_across_moves(pair, seed2):
+    """features() is the learned cost model's input contract
+    (``repro.core.learn`` trains cross-shape on exactly these vectors):
+    it must be a pure function of the state — identical vector on
+    repeated calls, donor unchanged by deriving moves — and stay finite
+    and ``n_features``-wide across neighbor moves and transplant into a
+    sibling space, for BOTH ops."""
+    space, s = pair
+    f1, f2 = space.features(s), space.features(s)
+    assert f1.shape == (space.n_features,)
+    assert (f1 == f2).all()
+    assert all(map(math.isfinite, f1.tolist()))
+    for s2 in space.neighbors(s)[:4]:
+        g = space.features(s2)
+        assert g.shape == (space.n_features,)
+        assert all(map(math.isfinite, g.tolist()))
+        # deriving a neighbor's features must not perturb the donor's
+        assert (space.features(s) == f1).all()
+    rng = random.Random(seed2)
+    if space.op == "gemm":
+        dst = GemmConfigSpace(
+            2 ** rng.randint(2, 7), 2 ** rng.randint(2, 7), 2 ** rng.randint(2, 7)
+        )
+    else:
+        dst = FlashAttnConfigSpace(
+            2 ** rng.randint(2, 9), 2 ** rng.randint(2, 9), 128
+        )
+    st_t = dst.transplant(s)
+    assert st_t is not None
+    ft = dst.features(st_t)
+    # same op + same depths => same feature width: cross-shape corpora
+    # (the whole point of the rank model) stay concatenable
+    assert dst.n_features == space.n_features
+    assert ft.shape == (dst.n_features,)
+    assert all(map(math.isfinite, ft.tolist()))
+
+
 @given(st.one_of(gemm_space(), flash_space()))
 @settings(max_examples=20, deadline=None)
 def test_enumerate_matches_size_on_small_spaces(space):
