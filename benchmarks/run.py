@@ -67,7 +67,9 @@ def diff_measure(
     quality block (present since the ``repro.core.learn`` PR) misses its
     acceptance bars in the *current* run — >=30% fewer real
     measurements at a true best cost within 5% of the unfiltered
-    search.  A missing baseline (first PR to record the bench, or a
+    search — or when the sharded-search block (present since the
+    ``repro.core.shard`` PR) breaks a partition invariant.  A missing
+    baseline (first PR to record the bench, or a
     fresh clone) passes with a note — history has to start somewhere."""
     with open(current) as f:
         cur = json.load(f)
@@ -89,6 +91,22 @@ def diff_measure(
                 "measure-diff,FAIL,learned-filtered best cost "
                 f"{lf.get('best_cost_ratio', '?')}x the unfiltered best "
                 "(bar: 1.05)",
+                file=sys.stderr,
+            )
+            rc = 1
+    ss = cur.get("sharded_search")
+    if ss is not None:
+        # partition invariants hold run-by-run too (block absent from
+        # pre-shard artifacts, which is fine): the measured sets must be
+        # disjoint and the elect-and-merge must land the single-engine
+        # best exactly
+        if not ss.get("meets_shard_invariants", False):
+            print(
+                "measure-diff,FAIL,sharded search broke an invariant: "
+                f"disjoint={ss.get('shard_disjoint')} "
+                f"merged_matches_single={ss.get('merged_best_matches_single')} "
+                f"election_reproducible={ss.get('election_reproducible')} "
+                f"errors={ss.get('errors')}",
                 file=sys.stderr,
             )
             rc = 1

@@ -70,6 +70,16 @@ from .records import (
     workload_key_for,
 )
 from .session import ArchTuneReport, GemmWorkload, TuningSession, Workload
+from .shard import (
+    ShardSpec,
+    await_markers,
+    elect_best,
+    parse_shard,
+    read_done_markers,
+    shard_dir_for,
+    shard_of,
+    write_done_marker,
+)
 from .snapshot import TuneCheckpointer, TuneInterrupted
 from .space import FactoredSearchSpace, SearchSpace, State
 from .tuners import (
@@ -131,6 +141,14 @@ __all__ = [
     "FaultPlan",
     "RetryPolicy",
     "classify_error",
+    "ShardSpec",
+    "await_markers",
+    "elect_best",
+    "parse_shard",
+    "read_done_markers",
+    "shard_dir_for",
+    "shard_of",
+    "write_done_marker",
     "TuneCheckpointer",
     "TuneInterrupted",
     "TrialJournal",

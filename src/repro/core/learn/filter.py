@@ -29,6 +29,7 @@ so a later session starts filtering from wave one instead of measuring
 
 from __future__ import annotations
 
+import os
 import time
 from typing import Optional, Sequence
 
@@ -94,6 +95,46 @@ class ProposalFilter:
     def active(self) -> bool:
         """Whether :meth:`select` can currently drop candidates."""
         return self.model is not None and self.model.is_fitted
+
+    # -- crash-safe resume ----------------------------------------------------
+    def state_dict(self) -> dict:
+        """JSON-serializable filter state for crash-safe resume: the
+        retrain cadence counters plus the fitted model's provenance
+        (content key + corpus size).  The model weights themselves are
+        NOT serialized — they already persist content-keyed in
+        ``cache_dir`` (every refit saves before the next round
+        boundary), so the snapshot only has to name the file."""
+        return {
+            "waves_since_check": self._waves_since_check,
+            "rows_at_fit": self._rows_at_fit,
+            "n_retrains": self.n_retrains,
+            "model_key": None if self.model is None else self.model.content_key(),
+            "model_rows": 0 if self.model is None else self.model.n_rows_trained,
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        """Restore :meth:`state_dict` output.  Without this, a resumed
+        ``--learned-filter on`` run resets ``_waves_since_check`` to
+        None (an immediate retrain check on the first resumed wave) and
+        loses ``_rows_at_fit``, so it skips different candidates than
+        the uninterrupted run — the resume-parity bug this fixes."""
+        wsc = state.get("waves_since_check")
+        self._waves_since_check = None if wsc is None else int(wsc)
+        self._rows_at_fit = int(state.get("rows_at_fit", 0))
+        self.n_retrains = int(state.get("n_retrains", 0))
+        key = state.get("model_key")
+        if key is None:
+            self.model = None
+            return
+        if self.cache_dir is not None:
+            cached = RankingCostModel.load(
+                os.path.join(self.cache_dir, f"rankmodel-{key}.json")
+            )
+            if cached is not None and cached.compatible_with(
+                self.space.op, self.dtype, self.fingerprint,
+                self.space.n_features,
+            ):
+                self.model = cached
 
     # -- retraining -----------------------------------------------------------
     def maybe_retrain(self) -> bool:

@@ -27,6 +27,12 @@ and by never re-measuring a configuration they have already seen.
     merges journal rows appended by *sibling* engines/processes sharing
     the journal file, so concurrent searches serve each other's fresh
     measurements mid-search instead of re-measuring;
+  * **shard ownership** — with an enabled
+    :class:`~repro.core.shard.ShardSpec`, cache misses this engine does
+    not own (stable hash of the journal key + state key mod the shard
+    count) are *deferred* to the sibling shard after one journal reload,
+    instead of occupying a lane — two hosts splitting one candidate
+    stream never measure the same configuration;
   * **stats** — dispatch/hit counters plus build-cache counters
     (compiles vs LRU/disk hits, see ``CostBackend.compile_stats``),
     shareable across engines via :class:`MeasureStats`, so benchmarks
@@ -51,6 +57,7 @@ from .executor import LaneExecutor, LaneResult, SimulatedExecutor
 from .fault import RetryPolicy, TRANSIENT_KINDS, classify_error
 from .learn.filter import ProposalFilter
 from .records import TrialJournal
+from .shard import ShardSpec
 
 __all__ = ["MeasureEngine", "MeasureOutcome", "MeasureStats"]
 
@@ -74,6 +81,10 @@ class MeasureOutcome:
     #: better).  The ``inf`` cost means "not measured this run", NOT
     #: "infeasible" — the journal row is provenance, never a cache entry
     predicted: Optional[float] = None
+    #: sharded search: this candidate belongs to a sibling shard and was
+    #: not in the journal yet — the ``inf`` cost means "the sibling owns
+    #: it", never "infeasible"; nothing is journaled for it here
+    deferred: bool = False
 
 
 @dataclasses.dataclass
@@ -105,6 +116,9 @@ class MeasureStats:
     trials_avoided_learned: int = 0  # candidates skipped on a model's say-so
     n_learned_retrains: int = 0  # mid-search refits from fresh journal rows
     learn_s: float = 0.0  # wall seconds spent scoring + retraining
+    # -- sharded search (see repro.core.shard; zero without a ShardSpec) -----
+    n_deferred_to_sibling: int = 0  # non-owned misses left to a sibling shard
+    n_served_by_sibling: int = 0  # non-owned candidates served from the journal
     # -- fault tolerance (see repro.core.fault; zero without a RetryPolicy) --
     n_retries: int = 0  # transient-failure re-dispatches
     retry_backoff_s: float = 0.0  # backoff charged to the clock by retries
@@ -163,6 +177,7 @@ class MeasureEngine:
         retry: Optional[RetryPolicy] = None,
         straggler_factor: float = 8.0,
         learned_filter: Optional[ProposalFilter] = None,
+        shard: Optional[ShardSpec] = None,
     ):
         if analyze not in ("off", "warn", "prune"):
             raise ValueError(
@@ -218,6 +233,20 @@ class MeasureEngine:
         # measured (skips journal as {"c": null, "pred": score}
         # provenance rows); None keeps the historical path bit-identical
         self.learned_filter = learned_filter
+        # sharded search: with an enabled ShardSpec, cache misses this
+        # engine does not own (see repro.core.shard.shard_of) become
+        # deferred outcomes served later by the sibling's journal rows
+        # instead of occupying a lane.  A 1-shard spec normalizes to
+        # None so the default path stays bit-identical.
+        if shard is not None and not shard.enabled:
+            shard = None
+        if shard is not None and (journal is None or self.journal_key is None):
+            raise ValueError(
+                "sharded measurement needs a shared journal and a "
+                "workload key (deferred candidates are served by the "
+                "sibling's journal rows)"
+            )
+        self.shard = shard
 
     @property
     def analyzer(self) -> ScheduleAnalyzer:
@@ -234,6 +263,15 @@ class MeasureEngine:
         return self.overhead_s + (
             0.0 if math.isinf(cost) else min(cost, self.timeout_s)
         )
+
+    # -- sharding ------------------------------------------------------------
+    def _shard_tag(self) -> Optional[tuple[int, int]]:
+        """Journal provenance for measured rows: ``(index, count)`` when
+        sharding is active, None otherwise (rows stay byte-identical to
+        the unsharded format)."""
+        if self.shard is None:
+            return None
+        return (self.shard.index, self.shard.count)
 
     # -- fault handling ------------------------------------------------------
     def _lane_kind(self, lane: LaneResult) -> Optional[str]:
@@ -264,7 +302,7 @@ class MeasureEngine:
             if self.journal is not None and self.journal_key is not None:
                 self.journal.record(
                     self.journal_key, s, cost, op=self.backend.op,
-                    attempts=n_attempts,
+                    attempts=n_attempts, shard=self._shard_tag(),
                 )
             return MeasureOutcome(
                 s, cost, False, lane_s, None,
@@ -289,7 +327,7 @@ class MeasureEngine:
             # but never journaled.
             self.journal.record_failure(
                 self.journal_key, s, kind, attempts=n_attempts,
-                op=self.backend.op,
+                op=self.backend.op, shard=self._shard_tag(),
             )
         return MeasureOutcome(
             s, math.inf, False, lane_s, lane.error, kind=kind,
@@ -322,7 +360,14 @@ class MeasureEngine:
         walls = sorted(l.wall_s for l in lanes if l.error is None)
         if len(walls) < 3:
             return
-        med = walls[len(walls) // 2]
+        # true median: even-length waves average the two middle walls —
+        # taking the upper element alone biased the threshold high and
+        # misclassified borderline lanes on 4-lane waves
+        n = len(walls)
+        if n % 2:
+            med = walls[n // 2]
+        else:
+            med = 0.5 * (walls[n // 2 - 1] + walls[n // 2])
         if med <= 0.0:
             return
         for l in lanes:
@@ -364,6 +409,12 @@ class MeasureEngine:
             if cached is not None:
                 outcomes[i] = MeasureOutcome(s, cached, True, 0.0)
                 n_hits += 1
+                if self.shard is not None and not self.shard.owns(
+                    self.journal_key, s.key()
+                ):
+                    # a hit on a candidate we don't own: the sibling's
+                    # measurement (merged by an earlier reload) served it
+                    self.stats.n_served_by_sibling += 1
             else:
                 miss_idx.append(i)
         if miss_idx and self.analyze != "off":
@@ -391,7 +442,7 @@ class MeasureEngine:
                     kept.append(i)
             miss_idx = kept
             self.stats.static_s += time.perf_counter() - t0
-        if self.learned_filter is not None:
+        if self.learned_filter is not None and len(miss_idx) >= 2:
             # learned proposal filter: retrain at its cadence from the
             # journal rows accumulated so far (this very search's rows
             # included), then measure only the wave's predicted-best
@@ -399,27 +450,61 @@ class MeasureEngine:
             # a {"c": null, "pred": score} provenance row — never a
             # cost-table entry, so nothing downstream can ever serve the
             # guess as a measurement.  The trial is still charged by
-            # TuningContext, exactly like a static prune.
+            # TuningContext, exactly like a static prune.  Waves that
+            # cannot skip anything (fully cache-served, or a single
+            # miss) never reach this block, so they neither advance the
+            # retrain cadence nor pay a build_dataset re-parse with
+            # nothing to filter.
             flt = self.learned_filter
             learn_before = flt.learn_s
             retrains_before = flt.n_retrains
             flt.maybe_retrain()
-            if len(miss_idx) >= 2:
-                kept_rel, skipped_rel = flt.select([states[i] for i in miss_idx])
-                for rel, score in skipped_rel:
-                    i = miss_idx[rel]
-                    s = states[i]
-                    outcomes[i] = MeasureOutcome(
-                        s, math.inf, False, 0.0, predicted=score
+            kept_rel, skipped_rel = flt.select([states[i] for i in miss_idx])
+            for rel, score in skipped_rel:
+                i = miss_idx[rel]
+                s = states[i]
+                outcomes[i] = MeasureOutcome(
+                    s, math.inf, False, 0.0, predicted=score
+                )
+                self.stats.trials_avoided_learned += 1
+                if self.journal is not None and self.journal_key is not None:
+                    self.journal.record_predicted(
+                        self.journal_key, s, score, op=self.backend.op
                     )
-                    self.stats.trials_avoided_learned += 1
-                    if self.journal is not None and self.journal_key is not None:
-                        self.journal.record_predicted(
-                            self.journal_key, s, score, op=self.backend.op
-                        )
-                miss_idx = [miss_idx[rel] for rel in kept_rel]
+            miss_idx = [miss_idx[rel] for rel in kept_rel]
             self.stats.learn_s += flt.learn_s - learn_before
             self.stats.n_learned_retrains += flt.n_retrains - retrains_before
+        if self.shard is not None and miss_idx:
+            # shard ownership — the last funnel stage before the lanes:
+            # misses this engine does not own are the sibling's to
+            # measure.  One journal reload gives the sibling's fresh
+            # rows a chance to serve them as free hits; whatever is
+            # still missing defers (an inf outcome with zero lane time,
+            # never journaled — the sibling will write the real row, and
+            # the elect-and-merge step reconciles the bests at the end).
+            owned = [
+                i for i in miss_idx
+                if self.shard.owns(self.journal_key, states[i].key())
+            ]
+            foreign = [i for i in miss_idx if i not in set(owned)]
+            if foreign:
+                self.stats.n_journal_reloads += 1
+                self.stats.n_journal_rows_merged += self.journal.reload()
+                for i in foreign:
+                    s = states[i]
+                    cached = self.journal.get(
+                        self.journal_key, s.key(), op=self.backend.op
+                    )
+                    if cached is not None:
+                        outcomes[i] = MeasureOutcome(s, cached, True, 0.0)
+                        n_hits += 1
+                        self.stats.n_served_by_sibling += 1
+                    else:
+                        outcomes[i] = MeasureOutcome(
+                            s, math.inf, False, 0.0, deferred=True
+                        )
+                        self.stats.n_deferred_to_sibling += 1
+            miss_idx = owned
         if miss_idx:
             # NOTE: self.timeout_s is the *simulated charging cap* (a slow
             # config charges at most that much search clock); the real

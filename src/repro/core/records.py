@@ -482,11 +482,15 @@ class TrialJournal:
 
     def record(self, workload: str, state: State, cost: float,
                op: Optional[str] = None, kind: Optional[str] = None,
-               attempts: Optional[int] = None) -> None:
+               attempts: Optional[int] = None,
+               shard: Optional[Sequence[int]] = None) -> None:
         """Journal one measurement.  ``inf`` costs are failure rows; they
         carry a failure ``kind`` (default ``"build"`` — the historical
         backend-says-infeasible case) and optionally the number of
-        measurement ``attempts`` that led to the verdict."""
+        measurement ``attempts`` that led to the verdict.  ``shard`` is
+        the measuring engine's ``(index, count)`` in a sharded search —
+        pure provenance (the audit CLI recomputes ownership from it);
+        unsharded rows stay byte-identical to the historical format."""
         if op is None:
             op = op_of_workload_key(workload)
         with self._lock:
@@ -504,10 +508,13 @@ class TrialJournal:
                     row["kind"] = kind or "build"
                     if attempts is not None and attempts > 1:
                         row["attempts"] = int(attempts)
+                if shard is not None:
+                    row["shard"] = [int(shard[0]), int(shard[1])]
                 self._append_row(row)
 
     def record_failure(self, workload: str, state: State, kind: str,
-                       attempts: int = 1, op: Optional[str] = None) -> None:
+                       attempts: int = 1, op: Optional[str] = None,
+                       shard: Optional[Sequence[int]] = None) -> None:
         """Journal a lane failure with taxonomy provenance.
 
         *Permanent* kinds (a deterministic raise) are cacheable facts
@@ -520,7 +527,7 @@ class TrialJournal:
         is infeasible"."""
         if kind in PERMANENT_KINDS:
             self.record(workload, state, math.inf, op=op, kind=kind,
-                        attempts=attempts)
+                        attempts=attempts, shard=shard)
             return
         if op is None:
             op = op_of_workload_key(workload)
@@ -535,6 +542,8 @@ class TrialJournal:
             row = {"w": workload, "k": key, "s": state.as_lists(), "op": op,
                    "c": None, "fail": True, "kind": str(kind),
                    "attempts": int(attempts)}
+            if shard is not None:
+                row["shard"] = [int(shard[0]), int(shard[1])]
             self._append_row(row)
 
     def record_static(self, workload: str, state: State, reason: str,

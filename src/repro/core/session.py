@@ -48,6 +48,13 @@ from .records import (
     parse_workload_key_generic,
     workload_key_for,
 )
+from .shard import (
+    ShardSpec,
+    await_markers,
+    elect_best,
+    shard_dir_for,
+    write_done_marker,
+)
 from .snapshot import TuneCheckpointer, TuneInterrupted
 from .space import SearchSpace, State
 from .tuners import TUNERS, Budget, Trial, TuneResult
@@ -311,10 +318,19 @@ class TuningSession:
         filter_keep: float = 0.5,
         filter_retrain_every: int = 8,
         filter_min_rows: int = 32,
+        shard: Optional[ShardSpec] = None,
+        shard_wait_s: float = 60.0,
     ) -> TuneResult:
         if learned_filter not in ("off", "on"):
             raise ValueError(
                 f"learned_filter must be 'off' or 'on', got {learned_filter!r}"
+            )
+        if shard is not None and not shard.enabled:
+            shard = None  # 0/1 is the unsharded engine, bit-identical
+        if shard is not None and self.journal is None:
+            raise ValueError(
+                "sharded tuning (shard I/N with N > 1) needs a shared journal "
+                "— siblings exchange measurements and done markers through it"
             )
         space = wl.space()
         cost = self.cost_factory(space)
@@ -338,11 +354,22 @@ class TuningSession:
                 "learned_filter='on' conflicts with the provided engine "
                 "(it has no ProposalFilter)"
             )
+        if engine is not None and shard is not None and engine.shard != shard:
+            raise ValueError(
+                f"shard={shard} conflicts with the provided engine's "
+                f"{engine.shard}"
+            )
+        # each shard owns its own search state: a shard-suffixed snapshot
+        # identity keeps two hosts resuming one workload from colliding
+        tuner_id = (
+            tuner_name if shard is None
+            else f"{tuner_name}@shard{shard.index}of{shard.count}"
+        )
         # -- crash-safe resume: serve finished workloads from their done
         # snapshot, restore interrupted ones mid-search -----------------------
         restore = None
         if checkpointer is not None and resume:
-            payload = checkpointer.load(wkey, tuner_name)
+            payload = checkpointer.load(wkey, tuner_id)
             if payload is not None and payload.get("done"):
                 result = _result_from_jsonable(payload["result"], space)
                 if self.verbose:
@@ -356,7 +383,7 @@ class TuningSession:
         elif checkpointer is not None:
             # fresh run: stale snapshots (incl. a previous done marker)
             # must not shadow this run for a later --resume
-            checkpointer.clear(wkey, tuner_name)
+            checkpointer.clear(wkey, tuner_id)
         if engine is None:
             flt = None
             if learned_filter == "on":
@@ -383,6 +410,7 @@ class TuningSession:
                 analyze=analyze,
                 retry=retry,
                 learned_filter=flt,
+                shard=shard,
             )
         budget = budget or Budget(max_fraction=0.001)
         tuner_cls = TUNERS[tuner_name]
@@ -405,7 +433,7 @@ class TuningSession:
                 if _ck.interrupted or ctx.round_idx % _ck.every_rounds == 0:
                     _ck.save(
                         wkey,
-                        tuner_name,
+                        tuner_id,
                         {
                             "tuner": tuner_name,
                             "tuner_state": t.state_dict(),
@@ -419,7 +447,50 @@ class TuningSession:
         result = tuner.tune(
             budget, engine=engine, checkpoint_fn=checkpoint_fn, restore=restore
         )
-        if result.best_state is not None and math.isfinite(result.best_cost):
+        if shard is not None:
+            # elect-and-merge: publish this shard's best, wait for the
+            # siblings' done markers, and keep-best-merge the elected
+            # winner (lowest journaled cost, ties -> lowest shard index)
+            # into the records table.  Every shard runs this — the merge
+            # is idempotent, so no coordinator is needed.
+            root = shard_dir_for(self.journal.path)
+            write_done_marker(
+                root,
+                engine.journal_key,
+                shard,
+                None if result.best_state is None else result.best_state.as_lists(),
+                result.best_cost,
+                result.n_trials,
+            )
+            markers = await_markers(
+                root, engine.journal_key, shard, timeout_s=shard_wait_s
+            )
+            if len(markers) < shard.count and self.verbose:
+                missing = sorted(set(range(shard.count)) - set(markers))
+                print(
+                    f"[tune] {wl.label or wkey} shard {shard}: warning — "
+                    f"sibling shard(s) {missing} never reported within "
+                    f"{shard_wait_s:.0f}s; electing over the partial set"
+                )
+            # pick up the siblings' measurements before anyone reads best_state
+            self.journal.reload()
+            won = elect_best(markers)
+            if won is not None:
+                win_idx, win_lists, win_cost = won
+                self.records.update(
+                    wkey,
+                    space.state_from_lists(win_lists),
+                    win_cost,
+                    tuner_name,
+                    result.n_trials,
+                    extra={
+                        "label": wl.label,
+                        "n_workers": engine.n_workers,
+                        "shard_winner": win_idx,
+                        "n_shards": shard.count,
+                    },
+                )
+        elif result.best_state is not None and math.isfinite(result.best_cost):
             self.records.update(
                 wkey,
                 result.best_state,
@@ -433,7 +504,7 @@ class TuningSession:
             # between the two re-runs the search instead of losing the record
             checkpointer.save(
                 wkey,
-                tuner_name,
+                tuner_id,
                 {"done": True, "tuner": tuner_name,
                  "result": _result_to_jsonable(result)},
                 step=_DONE_STEP,
@@ -469,6 +540,8 @@ class TuningSession:
         filter_keep: float = 0.5,
         filter_retrain_every: int = 8,
         filter_min_rows: int = 32,
+        shard: Optional[ShardSpec] = None,
+        shard_wait_s: float = 60.0,
     ) -> ArchTuneReport:
         """Tune every distinct workload an architecture executes through
         one shared engine configuration and one shared budget pool.
@@ -492,6 +565,13 @@ class TuningSession:
         ``reload_every=N`` makes every workload engine merge sibling
         journal rows every N waves (mid-search cache sharing between
         concurrent engines on a common journal file; 0 disables).
+
+        ``shard=ShardSpec(i, n)`` makes this process shard ``i`` of an
+        ``n``-way sharded search: every workload engine measures only
+        the candidates it owns (stable hash, see ``repro.core.shard``),
+        defers the rest to the sibling processes running the remaining
+        shards over the same journal, and elect-and-merges the per-shard
+        bests into one records entry when the workload finishes.
         """
         if workloads is None:
             if arch is None:
@@ -546,6 +626,8 @@ class TuningSession:
                     filter_keep=filter_keep,
                     filter_retrain_every=filter_retrain_every,
                     filter_min_rows=filter_min_rows,
+                    shard=shard,
+                    shard_wait_s=shard_wait_s,
                 )
                 if left_trials is not None:
                     left_trials -= res.n_trials

@@ -39,6 +39,7 @@ from typing import Callable, Optional, Sequence
 from ..space import SearchSpace, State
 from ..cost.base import CostBackend
 from ..measure import MeasureEngine
+from ..shard import ShardSpec
 
 __all__ = [
     "Budget",
@@ -139,6 +140,7 @@ class TuningContext:
         n_workers: Optional[int] = None,
         engine: Optional[MeasureEngine] = None,
         checkpoint_fn: Optional[Callable[["Tuner", "TuningContext"], None]] = None,
+        shard: Optional[ShardSpec] = None,
     ):
         self.space = space
         self.cost_backend = cost
@@ -160,6 +162,7 @@ class TuningContext:
                 n_workers=1 if n_workers is None else n_workers,
                 overhead_s=0.35 if overhead_s is None else overhead_s,
                 timeout_s=4.0 if measure_timeout_s is None else measure_timeout_s,
+                shard=shard,
             )
         else:
             # the engine owns the measurement model: reject conflicting
@@ -177,6 +180,11 @@ class TuningContext:
                 raise ValueError(
                     f"n_workers={n_workers} conflicts with the provided "
                     f"engine's {engine.n_workers}"
+                )
+            if shard is not None and shard.enabled and shard != engine.shard:
+                raise ValueError(
+                    f"shard={shard} conflicts with the provided "
+                    f"engine's {engine.shard}"
                 )
         self.engine = engine
         self.n_workers = engine.n_workers
@@ -208,7 +216,7 @@ class TuningContext:
     def snapshot(self) -> dict:
         """JSON-serializable search state (the context half of a
         snapshot; the tuner half is ``Tuner.state_dict``)."""
-        return {
+        snap = {
             "visited": [[k, encode_cost(c)] for k, c in self.visited.items()],
             "trials": [
                 [t.state.as_lists(), encode_cost(t.cost), t.clock_s]
@@ -219,6 +227,13 @@ class TuningContext:
             "clock_s": self.clock_s,
             "round": self.round_idx,
         }
+        flt = self.engine.learned_filter
+        if flt is not None:
+            # without this, a resumed --learned-filter run restarts the
+            # retrain cadence and re-derives the model, skipping a
+            # different candidate sequence than the uninterrupted run
+            snap["filter"] = flt.state_dict()
+        return snap
 
     def restore_snapshot(self, snap: dict) -> None:
         """Rebuild visited/trials/best/clock from :meth:`snapshot` output
@@ -235,6 +250,9 @@ class TuningContext:
         self.best_cost = decode_cost(snap["best_cost"])
         self.clock_s = float(snap["clock_s"])
         self.round_idx = int(snap.get("round", 0))
+        flt = self.engine.learned_filter
+        if flt is not None and "filter" in snap:  # pre-filter snapshots lack it
+            flt.load_state_dict(snap["filter"])
 
     # -- paper bookkeeping ---------------------------------------------------
     def seen(self, s: State) -> bool:

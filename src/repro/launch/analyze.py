@@ -31,6 +31,14 @@ The audit also reports the learned-model training corpus per op/dtype
 fail/static/predicted provenance rows), so users can tell when a
 workload has accumulated enough data to train on.
 
+Sharded searches (``tune --shard I/N``, see ``repro.core.shard``) leave
+``"shard": [i, n]`` tags on their journal rows and done markers next to
+the journal; the audit recomputes each tagged row's owner (a claimed
+shard that doesn't own the candidate is an error), errors on candidates
+measured by two shards, and warns on owner gaps — shards that never
+wrote their done marker.  The ``[analyze] shard-coverage:`` line is the
+machine-greppable summary CI asserts on.
+
 Usage::
 
   python -m repro.launch.analyze                       # records/*.json + journals
@@ -58,6 +66,7 @@ from repro.core.records import (
     iter_journal_rows,
     parse_workload_key_generic,
 )
+from repro.core.shard import read_done_markers, shard_dir_for, shard_of
 from repro.core.space import state_from_lists
 
 
@@ -73,6 +82,13 @@ class _Auditor:
         self.n_retried_rows = 0  # fail rows that record >1 attempt
         self.n_permanent_legal = 0  # permanent failures on legal schedules
         self.n_predicted = 0  # learned-filter skip provenance rows
+        # sharded-search coverage (rows tagged "shard": [i, n])
+        self.n_shard_rows = 0
+        self.shard_workloads: set[str] = set()
+        self.n_shard_violations = 0  # row's claimed shard != recomputed owner
+        self.n_cross_shard_dups = 0  # one candidate measured by two shards
+        self.n_marker_gaps = 0  # done-marker sets missing a shard index
+        self._shard_claims: dict[tuple[str, str], int] = {}
 
     def error(self, where: str, msg: str) -> None:
         self.errors.append(f"{where}: {msg}")
@@ -149,15 +165,48 @@ def audit_records(path: str, auditor: _Auditor) -> int:
 def audit_journal(path: str, auditor: _Auditor) -> tuple[int, int]:
     """Audit one trial journal; returns (rows seen, static audit rows)."""
     n = n_static = 0
+    shard_counts: dict[str, int] = {}  # journal key -> shard count seen
     for row in iter_journal_rows(path):
         n += 1
         try:
-            base_key = row["w"].split("?", 1)[0]
+            full_key = row["w"]
+            base_key = full_key.split("?", 1)[0]
             state_key = row["k"]
         except (KeyError, AttributeError, TypeError):
             auditor.warn(path, f"malformed row (no w/k): {str(row)[:80]}")
             continue
         where = f"{path} :: {base_key} :: {state_key}"
+        # sharded-search coverage: a row tagged "shard": [i, n] must be
+        # owned by shard i under the deterministic partition, and no
+        # candidate may carry measurements from two different shards
+        tag = row.get("shard")
+        if tag is not None:
+            try:
+                si, sn = int(tag[0]), int(tag[1])
+            except (TypeError, ValueError, IndexError, KeyError):
+                auditor.warn(where, f"malformed shard tag {tag!r}")
+            else:
+                auditor.n_shard_rows += 1
+                auditor.shard_workloads.add(full_key)
+                shard_counts[full_key] = max(shard_counts.get(full_key, 0), sn)
+                owner = shard_of(full_key, state_key, sn)
+                if owner != si:
+                    auditor.n_shard_violations += 1
+                    auditor.error(
+                        where,
+                        f"shard-ownership violation: row claims shard "
+                        f"{si}/{sn} but the partition owner is {owner}",
+                    )
+                claim = auditor._shard_claims.setdefault(
+                    (full_key, state_key), si
+                )
+                if claim != si:
+                    auditor.n_cross_shard_dups += 1
+                    auditor.error(
+                        where,
+                        f"candidate measured by two shards "
+                        f"({claim} and {si}) — the partition must be disjoint",
+                    )
         parsed = parse_workload_key_generic(base_key)
         if parsed is None:
             # journals are append-only logs that may carry foreign
@@ -235,6 +284,22 @@ def audit_journal(path: str, auditor: _Auditor) -> tuple[int, int]:
                 f"permanent-failure row ({fail_kind}) cached for a schedule "
                 f"the analyzer finds legal",
             )
+    # done-marker coverage: every workload with sharded rows should have
+    # all n shard markers once the searches finish — a gap means a shard
+    # never completed (or timed out before electing), so its owned slice
+    # of the space went unexplored
+    root = shard_dir_for(path)
+    if shard_counts and os.path.isdir(root):
+        for jkey, sn in sorted(shard_counts.items()):
+            markers = read_done_markers(root, jkey, sn)
+            missing = sorted(set(range(sn)) - set(markers))
+            if missing:
+                auditor.n_marker_gaps += 1
+                auditor.warn(
+                    f"{path} :: {jkey}",
+                    f"owner gap: shard(s) {missing} of {sn} never wrote a "
+                    f"done marker — their owned candidates are unexplored",
+                )
     return n, n_static
 
 
@@ -304,6 +369,14 @@ def main(argv=None) -> int:
         f"[analyze] failure-provenance: {kinds or 'none'} "
         f"retried_rows={auditor.n_retried_rows} "
         f"permanent_for_legal={auditor.n_permanent_legal}"
+    )
+    # machine-greppable sharded-search coverage summary (CI asserts on it)
+    print(
+        f"[analyze] shard-coverage: sharded_rows={auditor.n_shard_rows} "
+        f"workloads={len(auditor.shard_workloads)} "
+        f"violations={auditor.n_shard_violations} "
+        f"cross_shard_dups={auditor.n_cross_shard_dups} "
+        f"marker_gaps={auditor.n_marker_gaps}"
     )
     if auditor.errors or (args.strict and auditor.warnings):
         return 1

@@ -42,6 +42,18 @@ to the journal; content keys carry the op) lets re-runs and process-lane
 workers skip compilation entirely.  ``--reload-every N`` merges sibling
 engines' journal rows every N waves, so concurrent tuning runs sharing
 one journal file serve each other's fresh measurements mid-search.
+
+``--shard I/N`` turns those concurrent runs into one *partitioned*
+search: each process measures only the candidates it owns (a stable
+hash of the state key, seeded per workload), defers the rest to its
+siblings, and when the searches finish the shards elect the merged best
+(lowest journaled cost) into the shared records — see
+``repro.core.shard``:
+
+  python -m repro.launch.tune --op flash --records r.json \
+      --shard 0/2 --reload-every 2 &
+  python -m repro.launch.tune --op flash --records r.json \
+      --shard 1/2 --reload-every 2
 """
 
 from __future__ import annotations
@@ -66,6 +78,7 @@ from repro.core.cost.base import SleepingCost
 from repro.core.executor import EXECUTORS
 from repro.core.fault import RetryPolicy
 from repro.core.records import compile_cache_dir_for
+from repro.core.shard import parse_shard
 from repro.core.snapshot import TuneCheckpointer, TuneInterrupted
 
 
@@ -208,11 +221,30 @@ def main() -> None:
                          "their done marker); measurements replay from "
                          "the journal, so the resumed search reaches the "
                          "same best state as an uninterrupted run")
+    ap.add_argument("--shard", default="0/1",
+                    help="run as shard I/N of an N-way sharded search: N "
+                         "processes sharing one --journal each measure only "
+                         "the candidates they own (stable hash of the state "
+                         "key, seeded per workload), defer the rest to their "
+                         "siblings, and elect the merged best into the "
+                         "records when done (default 0/1: unsharded, "
+                         "bit-identical to the plain engine)")
+    ap.add_argument("--shard-wait", type=float, default=60.0,
+                    help="seconds to wait for sibling shards' done markers "
+                         "before electing over whatever reported")
     ap.add_argument("--measure-delay", type=float, default=0.0,
                     help="seconds of real lane occupancy added per "
                          "measurement (SleepingCost wrapper) — gives "
                          "interrupt/kill tests a window to land in")
     args = ap.parse_args()
+
+    try:
+        shard = parse_shard(args.shard)
+    except ValueError as e:
+        ap.error(str(e))
+    if shard.enabled and (args.journal == "none"):
+        ap.error("--shard needs a shared --journal (it is the shards' "
+                 "only communication channel)")
 
     if args.op not in op_names():
         # a clear CLI error instead of a deep registry KeyError later
@@ -317,6 +349,8 @@ def main() -> None:
                 filter_keep=args.filter_keep,
                 filter_retrain_every=args.filter_retrain_every,
                 filter_min_rows=args.filter_min_rows,
+                shard=shard,
+                shard_wait_s=args.shard_wait,
             )
     except TuneInterrupted as e:
         print(
@@ -333,6 +367,8 @@ def main() -> None:
         f"trials_avoided={report.stats.trials_avoided} "
         f"trials_avoided_learned={report.stats.trials_avoided_learned} "
         f"learned_retrains={report.stats.n_learned_retrains} "
+        f"deferred_to_sibling={report.stats.n_deferred_to_sibling} "
+        f"served_by_sibling={report.stats.n_served_by_sibling} "
         f"lane_failures={report.stats.n_failures})"
     )
 

@@ -395,3 +395,105 @@ def test_tune_arch_shares_budget_and_dedups_shapes(tmp_path):
         workloads=wls, budget=Budget(max_trials=90), n_workers=4
     )
     assert report2.stats.n_cache_hits > 0
+
+
+def test_sharded_engines_split_one_stream_disjointly(tmp_path, space):
+    """Two engines on shard 0/2 and 1/2 of one shared journal dispatch
+    disjoint candidate sets whose union covers the whole stream: the
+    non-owner defers (inf, zero lane time, nothing journaled) and is
+    later served by the sibling's rows instead of re-measuring."""
+    from repro.core import ShardSpec, shard_of
+
+    jpath = str(tmp_path / "shared.jsonl")
+    wkey = workload_key(space.m, space.k, space.n, "bfloat16", "analytical_tpu_v5e")
+    cost = AnalyticalTPUCost(space)
+    jkey = f"{wkey}?{cost.measure_fingerprint()}"
+    stream = list(itertools.islice(space.enumerate(), 24))
+    eng_a = MeasureEngine(cost, n_workers=4, journal=TrialJournal(jpath),
+                          workload_key=wkey, shard=ShardSpec(0, 2))
+    eng_b = MeasureEngine(cost, n_workers=4, journal=TrialJournal(jpath),
+                          workload_key=wkey, shard=ShardSpec(1, 2))
+
+    def drive(eng):
+        dispatched, out = set(), []
+        before = eng.stats.n_dispatched
+        for i in range(0, len(stream), 4):
+            wave = stream[i:i + 4]
+            outs = eng.measure_wave(wave)
+            out.extend(outs)
+            for o in outs:
+                if not o.cache_hit and not o.deferred and not math.isinf(o.cost):
+                    dispatched.add(o.state.key())
+        assert eng.stats.n_dispatched - before == len(dispatched)
+        return dispatched, out
+
+    measured_a, outs_a = drive(eng_a)
+    # engine A owns exactly the shard-0 keys; the rest deferred
+    assert measured_a == {
+        s.key() for s in stream if shard_of(jkey, s.key(), 2) == 0
+    }
+    deferred_a = [o for o in outs_a if o.deferred]
+    assert len(deferred_a) == len(stream) - len(measured_a)
+    assert all(math.isinf(o.cost) and o.lane_s == 0.0 for o in deferred_a)
+    assert eng_a.stats.n_deferred_to_sibling == len(deferred_a)
+
+    # engine B (same stream, sibling journal handle) measures the
+    # complement and serves A's rows from the shared file
+    measured_b, outs_b = drive(eng_b)
+    assert measured_a.isdisjoint(measured_b)
+    assert measured_a | measured_b == {s.key() for s in stream}
+    assert eng_b.stats.n_deferred_to_sibling == 0
+    assert eng_b.stats.n_served_by_sibling == len(measured_a)
+    # nothing deferred was journaled: every journal row belongs to its owner
+    eng_a.journal.close()
+    eng_b.journal.close()
+    import json
+    rows = [json.loads(l) for l in open(jpath)]
+    assert len(rows) == len(stream)
+    for row in rows:
+        si, sn = row["shard"]
+        assert shard_of(row["w"], row["k"], sn) == si
+
+    # A's second pass over the stream: everything now serves from cache
+    # (its own rows directly, B's via the shard-stage reload)
+    before = eng_a.stats.n_dispatched
+    hits, sib_before = 0, eng_a.stats.n_served_by_sibling
+    for i in range(0, len(stream), 4):
+        for o in eng_a.measure_wave(stream[i:i + 4]):
+            assert o.cache_hit and math.isfinite(o.cost)
+            hits += 1
+    assert hits == len(stream)
+    assert eng_a.stats.n_dispatched == before
+    assert eng_a.stats.n_served_by_sibling - sib_before == len(measured_b)
+
+
+def test_single_shard_spec_is_bit_identical_to_no_shard(tmp_path, space):
+    """ShardSpec(0, 1) — the CLI default 0/1 — normalizes away: same
+    outcomes, stats, and journal bytes as an engine built without one."""
+    from repro.core import ShardSpec
+
+    wkey = workload_key(space.m, space.k, space.n, "bfloat16", "analytical_tpu_v5e")
+    stream = list(itertools.islice(space.enumerate(), 8))
+    results = []
+    for tag, shard in (("plain", None), ("01", ShardSpec(0, 1))):
+        jpath = str(tmp_path / f"j_{tag}.jsonl")
+        eng = MeasureEngine(AnalyticalTPUCost(space), n_workers=4,
+                            journal=TrialJournal(jpath),
+                            workload_key=wkey, shard=shard)
+        assert eng.shard is None
+        outs = []
+        for i in range(0, len(stream), 4):
+            outs.extend(eng.measure_wave(stream[i:i + 4]))
+        eng.journal.close()
+        results.append((
+            [(o.state.key(), o.cost, o.cache_hit, o.lane_s) for o in outs],
+            open(jpath).read(),
+        ))
+    assert results[0] == results[1]
+
+
+def test_sharded_engine_requires_a_journal(space):
+    from repro.core import ShardSpec
+
+    with pytest.raises(ValueError, match="shared journal"):
+        MeasureEngine(AnalyticalTPUCost(space), shard=ShardSpec(0, 2))

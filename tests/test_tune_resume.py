@@ -351,3 +351,172 @@ def test_cli_resume_without_snapshot_is_a_fresh_run(tmp_path):
     )
     assert r.returncode == 0, r.stderr
     assert json.load(open(d / "records.json"))
+
+
+# -- learned-filter resume parity (the satellite bugfix: ProposalFilter
+# cadence + model provenance now live in the snapshot) ------------------------
+
+
+def _seed_filter_corpus(space, cost, jpath, n=16):
+    """Journal enough *cost-diverse* measured rows (same workload and
+    fingerprint scope) that a ProposalFilter trains on its first cadence
+    check — the rank model needs unequal costs to form training pairs,
+    so the states are random rather than the first of the enumeration."""
+    import random
+
+    from repro.core import MeasureEngine, workload_key
+
+    rng = random.Random(123)
+    wkey = workload_key(space.m, space.k, space.n, "bfloat16", cost.name)
+    journal = TrialJournal(jpath)
+    eng = MeasureEngine(cost, n_workers=4, journal=journal, workload_key=wkey)
+    stream, keys = [], set()
+    while len(stream) < n:
+        s = space.random_state(rng)
+        if s.key() not in keys:
+            keys.add(s.key())
+            stream.append(s)
+    for i in range(0, n, 4):
+        eng.measure_wave(stream[i:i + 4])
+    journal.close()
+    return wkey
+
+
+def _filtered_engine(space, cost, jpath):
+    """Engine with an aggressive ProposalFilter (short cadence, tiny
+    corpus floor) over the journal at ``jpath``; n_workers=4 so waves
+    carry >= 2 misses and the filter can actually skip."""
+    from repro.core import MeasureEngine, ProposalFilter, workload_key
+
+    wkey = workload_key(space.m, space.k, space.n, "bfloat16", cost.name)
+    journal = TrialJournal(jpath)
+    flt = ProposalFilter(
+        space, journal, dtype="bfloat16",
+        fingerprint=cost.measure_fingerprint(),
+        keep=0.5, retrain_every=2, min_rows=8,
+    )
+    return MeasureEngine(cost, n_workers=4, journal=journal,
+                         workload_key=wkey, learned_filter=flt)
+
+
+def test_filter_state_dict_round_trip(space, tmp_path):
+    cost = AnalyticalTPUCost(space)
+    jpath = str(tmp_path / "j.jsonl")
+    _seed_filter_corpus(space, cost, jpath)
+    eng = _filtered_engine(space, cost, jpath)
+    flt = eng.learned_filter
+    flt.maybe_retrain()
+    assert flt.active  # trained from the seeded corpus
+    snap = json.loads(json.dumps(flt.state_dict()))
+    assert snap["model_key"] == flt.model.content_key()
+    assert snap["waves_since_check"] == 0
+    # a fresh filter restored from the snapshot resumes the exact cadence
+    # and reloads the exact persisted model
+    eng2 = _filtered_engine(space, cost, jpath)
+    flt2 = eng2.learned_filter
+    flt2.load_state_dict(snap)
+    assert flt2._waves_since_check == flt._waves_since_check
+    assert flt2._rows_at_fit == flt._rows_at_fit
+    assert flt2.n_retrains == flt.n_retrains
+    assert flt2.model is not None
+    assert flt2.model.content_key() == flt.model.content_key()
+    # model_key None -> filtering off, exactly as snapshotted
+    flt2.load_state_dict({"waves_since_check": None, "rows_at_fit": 0,
+                          "n_retrains": 0, "model_key": None})
+    assert flt2.model is None and flt2._waves_since_check is None
+
+
+@pytest.mark.parametrize("stop_round", [2, 4])
+def test_filtered_resume_is_bit_identical(space, tmp_path, stop_round):
+    """Interrupt-and-resume with an ACTIVE ProposalFilter replays the
+    identical trial/skip sequence: the snapshot carries the filter's
+    retrain cadence and model provenance (without them the resumed run
+    re-checks the cadence immediately and skips different candidates)."""
+    import shutil
+
+    cost = AnalyticalTPUCost(space)
+    ref_j = str(tmp_path / "ref.jsonl")
+    _seed_filter_corpus(space, cost, ref_j)
+    run_j = str(tmp_path / "run.jsonl")
+    shutil.copy(ref_j, run_j)  # identical corpus, independent journals
+
+    def tune(jpath, checkpoint_fn=None, restore=None):
+        eng = _filtered_engine(space, cost, jpath)
+        t = GBFSTuner(space, cost, seed=7)
+        try:
+            return t.tune(Budget(max_trials=32), engine=eng,
+                          checkpoint_fn=checkpoint_fn, restore=restore)
+        finally:
+            eng.journal.close()
+
+    ref = tune(ref_j)
+    assert any(t.cost == float("inf") for t in ref.trials), \
+        "filter never skipped — the parity test is vacuous"
+
+    box = {}
+
+    def checkpoint_fn(t, ctx):
+        box["payload"] = {"tuner_state": t.state_dict(),
+                          "ctx": ctx.snapshot()}
+        if ctx.round_idx >= stop_round:
+            raise TuneInterrupted("test")
+
+    with pytest.raises(TuneInterrupted):
+        tune(run_j, checkpoint_fn=checkpoint_fn)
+    payload = json.loads(json.dumps(box["payload"]))
+    assert "filter" in payload["ctx"]  # the filter half of the snapshot
+    res = tune(run_j, restore=payload)
+    _assert_equivalent(ref, res)
+    # the journals agree row for row — including the {"c": null, "pred"}
+    # skip provenance, i.e. the filter skipped the same candidates
+    assert _journal_keys(run_j) == _journal_keys(ref_j)
+
+
+@pytest.mark.slow
+def test_cli_sigterm_resume_with_learned_filter_matches(tmp_path):
+    """End-to-end satellite acceptance: tune --learned-filter on, SIGTERM
+    mid-search, --resume replays the reference's journal sequence (trials
+    AND learned skips) and lands the same records."""
+    env = _env()
+    flags = ["--tuner", "g-bfs", "--workers", "4", "--learned-filter", "on",
+             "--filter-min-rows", "8", "--filter-retrain-every", "2"]
+    ref_dir = tmp_path / "ref"
+    ref_dir.mkdir()
+    r = subprocess.run(_tune_cmd(ref_dir, flags), env=env,
+                       capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, r.stderr
+    ref_jpath = str(ref_dir / "records.json.journal.jsonl")
+    ref_keys = _journal_keys(ref_jpath)
+    # the filter actually skipped something, else this test proves nothing
+    assert any(
+        "pred" in json.loads(l) for l in open(ref_jpath)
+    ), "no learned skips in the reference run"
+    ref_recs = json.load(open(ref_dir / "records.json"))
+
+    run_dir = tmp_path / "run"
+    run_dir.mkdir()
+    p = subprocess.Popen(_tune_cmd(run_dir, flags), env=env,
+                         stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+                         text=True)
+    jpath = str(run_dir / "records.json.journal.jsonl")
+    deadline = time.monotonic() + 120
+    while time.monotonic() < deadline:
+        if os.path.exists(jpath) and len(_journal_keys(jpath)) >= 3:
+            break
+        if p.poll() is not None:
+            pytest.fail(f"tune exited early: {p.communicate()[1]}")
+        time.sleep(0.05)
+    p.send_signal(signal.SIGTERM)
+    out, err = p.communicate(timeout=120)
+    assert p.returncode == 130, (out, err)
+    assert 0 < len(_journal_keys(jpath)) < len(ref_keys)
+
+    r2 = subprocess.run(_tune_cmd(run_dir, flags + ["--resume"]), env=env,
+                        capture_output=True, text=True, timeout=300)
+    assert r2.returncode == 0, r2.stderr
+    assert _journal_keys(jpath) == ref_keys
+    recs = json.load(open(run_dir / "records.json"))
+    assert sorted(recs) == sorted(ref_recs)
+    for key in recs:
+        assert recs[key]["cost"] == ref_recs[key]["cost"]
+        assert recs[key]["state"] == ref_recs[key]["state"]
